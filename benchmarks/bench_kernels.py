@@ -1,0 +1,51 @@
+"""Hot-spot microbench: the fused kernel matvec (chunked-XLA execution path)
+and the Pallas kernel's arithmetic-intensity analysis for the TPU target.
+
+Wall-clock is CPU (execution backend); the Pallas-tile roofline numbers are
+derived analytically from the BlockSpec tiling (DESIGN.md §3) since the TPU
+is the target, not the runtime."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, note, timeit
+
+
+def main() -> None:
+    import jax
+
+    from repro.kernels import ops
+    from repro.roofline import hw
+
+    r = np.random.default_rng(0)
+    d = 9
+    for n, b in ((100_000, 1000), (400_000, 4000)):
+        a = r.standard_normal((b, d)).astype(np.float32)
+        x = r.standard_normal((n, d)).astype(np.float32)
+        v = r.standard_normal((n,)).astype(np.float32)
+
+        def run(a=a, x=x, v=v):
+            jax.block_until_ready(
+                ops.kernel_matvec(a, x, v, kernel="rbf", sigma=1.0, backend="xla")
+            )
+
+        us = timeit(run, iters=3)
+        flops = b * n * (3 * d + 2)
+        emit(f"kernel_matvec_n{n}_b{b}", us, f"gflops_cpu={flops/us/1e3:.2f}")
+
+    # Pallas tile analysis (bm=bn=256, f32): MXU work vs VMEM traffic
+    bm = bn = 256
+    for dd in (9, 64, 256):
+        tile_flops = bm * bn * (2 * dd + 8)  # dist matmul + kernel map + mv
+        tile_bytes = (bm * dd + bn * dd + bn + bm) * 4
+        intensity = tile_flops / tile_bytes
+        ridge = hw.PEAK_FLOPS_BF16 / hw.HBM_BW  # ~240 flops/byte
+        bound = "compute" if intensity > ridge else "memory"
+        note(f"pallas tile d={dd}: {intensity:.0f} flop/B (ridge {ridge:.0f}) -> {bound}-bound")
+        emit(f"pallas_tile_intensity_d{dd}", 0.0,
+             f"flops_per_byte={intensity:.1f};bound={bound}")
+
+
+if __name__ == "__main__":
+    main()

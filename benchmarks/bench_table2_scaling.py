@@ -1,0 +1,61 @@
+"""Table 2: per-iteration cost scaling.  Skotch/ASkotch iterations are O(nb);
+PCG iterations are O(n^2).  Measured by timing jitted iterations across n —
+the ratio trend (quadratic vs linear in n at fixed b-fraction^2...) is the
+deliverable, plus the preconditioner-storage footprint (O(br) vs O(nr))."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, note, timeit
+
+
+def main() -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.askotch import ASkotchConfig, init_state, make_step
+    from repro.core.krr import KRRProblem
+    from repro.data import synthetic
+
+    sizes = [2000, 4000, 8000]
+    askotch_t, pcg_t = [], []
+    for n in sizes:
+        x_tr, y_tr, _, _ = synthetic.krr_regression(0, n, 8)
+        prob = KRRProblem(x=x_tr, y=y_tr, kernel="rbf", sigma=1.5,
+                          lam_unscaled=1e-6, backend="xla")
+        b, r = n // 100 + 64, 64
+        cfg = ASkotchConfig(block_size=b, rank=r, backend="xla")
+        step = jax.jit(make_step(prob, cfg))
+        state = init_state(prob)
+
+        def one_askotch(state=state, step=step):
+            s, _ = step(state)
+            jax.block_until_ready(s.w)
+
+        us_a = timeit(one_askotch, iters=5)
+        askotch_t.append(us_a)
+
+        v = jnp.ones((n,), jnp.float32)
+        mv = jax.jit(prob.k_lam_matvec)
+
+        def one_pcg(v=v, mv=mv):
+            jax.block_until_ready(mv(v))
+
+        us_p = timeit(one_pcg, iters=5)
+        pcg_t.append(us_p)
+        # storage: ASkotch preconditioner O(b r); PCG Nystrom O(n r)
+        emit(f"table2_askotch_iter_n{n}", us_a,
+             f"b={b};precond_floats={b*r}")
+        emit(f"table2_pcg_iter_n{n}", us_p, f"precond_floats={n*64}")
+
+    ra = askotch_t[-1] / askotch_t[0]
+    rp = pcg_t[-1] / pcg_t[0]
+    note(f"table2: n x4 -> askotch iter x{ra:.1f} (O(nb)~x16 worst if b~n), "
+         f"pcg iter x{rp:.1f} (O(n^2)~x16)")
+    growth = np.log(rp) / np.log(sizes[-1] / sizes[0])
+    emit("table2_pcg_growth_exponent", 0.0, f"exp={growth:.2f}(expect~2)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Shared benchmark helpers.  Every bench prints ``name,us_per_call,derived``
+CSV rows (harness contract) plus human-readable context on stderr."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def note(msg: str) -> None:
+    print(msg, file=sys.stderr, flush=True)
+
+
+def timeit(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        fn(*args)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6

@@ -1,0 +1,48 @@
+# One function per paper table/figure.  Prints ``name,us_per_call,derived`` CSV.
+#
+#   fig1      — ASkotch vs PCG/Falkon/EigenPro showdown (Fig. 1, §6.1-6.2)
+#   fig9      — linear convergence to machine precision in f64 (Fig. 9, §6.3)
+#   table2    — per-iteration cost/storage scaling (Table 2)
+#   ablation  — Nystrom/accel/rho/sampling ablations (Figs. 10-11, §6.4)
+#   kernels   — fused kernel-matvec hot-spot microbench + Pallas tile analysis
+#
+# Scaled to CPU execution (the container is the oracle runtime; TPU numbers
+# come from the dry-run roofline in EXPERIMENTS.md).  Select a subset with
+#   python -m benchmarks.run fig1 ablation
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_ablation,
+        bench_fig1_showdown,
+        bench_fig9_convergence,
+        bench_kernels,
+        bench_table2_scaling,
+    )
+
+    benches = {
+        "kernels": bench_kernels.main,
+        "table2": bench_table2_scaling.main,
+        "fig9": bench_fig9_convergence.main,
+        "ablation": bench_ablation.main,
+        "fig1": bench_fig1_showdown.main,
+    }
+    want = sys.argv[1:] or list(benches)
+    failed = []
+    for name in want:
+        print(f"# --- {name} ---", file=sys.stderr, flush=True)
+        try:
+            benches[name]()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"benches failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Train a small LM for a few hundred steps with the full training substrate
+(any --arch; reduced configs by default so it runs on CPU in minutes).
+
+    PYTHONPATH=src python examples/lm_train_smoke.py --arch qwen2-1.5b \
+        --steps 300 --batch 8 --seq 64
+"""
+
+import argparse
+import sys
+
+from repro.launch import train as train_mod
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    ns = argparse.Namespace(
+        arch=args.arch, reduced=True, steps=args.steps, batch=args.batch,
+        seq=args.seq, lr=3e-3, seed=0, ckpt_dir="/tmp/lm_smoke_ckpt",
+        ckpt_every=100, log_every=20, resume=False, inject_failure=-1,
+        straggler_factor=3.0,
+    )
+    res = train_mod.run(ns)
+    losses = [r["loss"] for r in res["history"]]
+    print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} over {args.steps} steps")
+    if losses[-1] >= losses[0]:
+        sys.exit("loss did not improve")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""The paper's primary contribution: Skotch/ASkotch approximate sketch-and-
+project solvers for full KRR, plus every baseline the paper compares against.
+"""
+
+from repro.core.askotch import ASkotchConfig, SolveResult, solve, solve_scan
+from repro.core.krr import KRRProblem, evaluate
+from repro.core.skotch import solve_skotch
+from repro.core.solver_api import METHODS, SolveOutput
+from repro.core.solver_api import solve as solve_any
+
+__all__ = [
+    "ASkotchConfig",
+    "KRRProblem",
+    "METHODS",
+    "SolveOutput",
+    "SolveResult",
+    "evaluate",
+    "solve",
+    "solve_any",
+    "solve_scan",
+    "solve_skotch",
+]

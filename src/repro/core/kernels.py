@@ -1,0 +1,98 @@
+"""Kernel functions for KRR (paper §6 / Appendix C.1).
+
+Three kernels are used by the paper's testbed: RBF, Laplacian, Matern-5/2.
+All are shift-invariant with unit diagonal k(x, x) = 1, a fact exploited by
+the randomly-pivoted-Cholesky baseline and the Nystrom shift heuristics.
+
+The canonical (materializing) implementations live here; the fused streaming
+implementations (never materializing K) live in ``repro.kernels`` (Pallas for
+TPU, chunked-XLA fallback) and are validated against these.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+KERNEL_NAMES = ("rbf", "laplacian", "matern52")
+
+
+def _sq_dists(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Pairwise squared Euclidean distances via the matmul expansion.
+
+    ||x - y||^2 = ||x||^2 + ||y||^2 - 2 <x, y>.  This is the MXU-friendly
+    form used by the Pallas kernel as well; f32 accumulation throughout.
+    """
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    xx = jnp.sum(x * x, axis=-1)[:, None]
+    yy = jnp.sum(y * y, axis=-1)[None, :]
+    xy = x @ y.T
+    return jnp.maximum(xx + yy - 2.0 * xy, 0.0)
+
+
+def _l1_dists(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Pairwise L1 distances.  O(m*n*d) memory if broadcast naively — callers
+    with large operands must go through the chunked/streaming ops."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    return jnp.sum(jnp.abs(x[:, None, :] - y[None, :, :]), axis=-1)
+
+
+def rbf(x: jax.Array, y: jax.Array, sigma: float) -> jax.Array:
+    """k(x, x') = exp(-||x - x'||^2 / (2 sigma^2))."""
+    return jnp.exp(-_sq_dists(x, y) / (2.0 * sigma**2))
+
+
+def laplacian(x: jax.Array, y: jax.Array, sigma: float) -> jax.Array:
+    """k(x, x') = exp(-||x - x'||_1 / sigma)."""
+    return jnp.exp(-_l1_dists(x, y) / sigma)
+
+
+def matern52(x: jax.Array, y: jax.Array, sigma: float) -> jax.Array:
+    """Matern-5/2: (1 + sqrt(5) d / sigma + 5 d^2 / (3 sigma^2)) exp(-sqrt(5) d / sigma)."""
+    d2 = _sq_dists(x, y)
+    d = jnp.sqrt(d2 + 1e-20)
+    s5 = jnp.sqrt(5.0) * d / sigma
+    return (1.0 + s5 + 5.0 * d2 / (3.0 * sigma**2)) * jnp.exp(-s5)
+
+
+_KERNELS: dict[str, Callable[[jax.Array, jax.Array, float], jax.Array]] = {
+    "rbf": rbf,
+    "laplacian": laplacian,
+    "matern52": matern52,
+}
+
+
+def kernel_fn(name: str) -> Callable[[jax.Array, jax.Array, float], jax.Array]:
+    try:
+        return _KERNELS[name]
+    except KeyError:
+        raise ValueError(f"unknown kernel {name!r}; available: {KERNEL_NAMES}") from None
+
+
+def kernel_matrix(name: str, x: jax.Array, y: jax.Array, sigma: float) -> jax.Array:
+    """Materialize K(x, y).  Small operands only (tests, b x b blocks)."""
+    return kernel_fn(name)(x, y, sigma)
+
+
+@functools.partial(jax.jit, static_argnames=("name",))
+def kernel_block(name: str, x: jax.Array, y: jax.Array, sigma: jax.Array) -> jax.Array:
+    """Jitted block materialization used for K_BB inside solver steps."""
+    return kernel_fn(name)(x, y, sigma)
+
+
+def median_heuristic(x: jax.Array, max_points: int = 2048, seed: int = 0) -> float:
+    """Median pairwise distance bandwidth heuristic (Gretton et al. 2012),
+    used by the paper for several datasets (Table 3)."""
+    n = x.shape[0]
+    if n > max_points:
+        idx = jax.random.permutation(jax.random.PRNGKey(seed), n)[:max_points]
+        x = x[idx]
+    d2 = _sq_dists(x, x)
+    iu = jnp.triu_indices(x.shape[0], k=1)
+    med = jnp.median(jnp.sqrt(d2[iu]))
+    return float(med)

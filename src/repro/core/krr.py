@@ -1,0 +1,69 @@
+"""Full-KRR problem container, prediction, and metrics (paper Eqs. (2)-(3)).
+
+The problem is the linear system (K + lam I) w = y with lam = n * lam_unscaled
+(the paper scales regularization by n, App. C.2.1).  K is only ever accessed
+through the fused streaming kernel ops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class KRRProblem:
+    x: jax.Array  # (n, d) features
+    y: jax.Array  # (n,) or (n, t) targets (t one-vs-all heads)
+    kernel: str = "rbf"
+    sigma: float = 1.0
+    lam_unscaled: float = 1e-6
+    backend: str = "auto"
+
+    @property
+    def n(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def lam(self) -> float:
+        return self.n * self.lam_unscaled
+
+    def matvec(self, v: jax.Array) -> jax.Array:
+        """K @ v (streamed, O(n^2 d) — baselines/metrics only)."""
+        return ops.kernel_matvec(
+            self.x, self.x, v, kernel=self.kernel, sigma=self.sigma, backend=self.backend
+        )
+
+    def k_lam_matvec(self, v: jax.Array) -> jax.Array:
+        """(K + lam I) @ v."""
+        return self.matvec(v) + self.lam * v
+
+    def relative_residual(self, w: jax.Array) -> jax.Array:
+        """||K_lam w - y|| / ||y||  (paper §6.3)."""
+        r = self.k_lam_matvec(w) - self.y
+        return jnp.linalg.norm(r) / jnp.linalg.norm(self.y)
+
+    def predict(self, w: jax.Array, x_test: jax.Array) -> jax.Array:
+        """f(x) = K(x_test, X_train) @ w."""
+        return ops.kernel_matvec(
+            x_test, self.x, w, kernel=self.kernel, sigma=self.sigma, backend=self.backend
+        )
+
+
+class Metrics(NamedTuple):
+    rmse: jax.Array
+    mae: jax.Array
+    accuracy: jax.Array  # sign-agreement (binary ±1 tasks); NaN-free for regression too
+
+
+def evaluate(y_pred: jax.Array, y_true: jax.Array) -> Metrics:
+    err = y_pred - y_true
+    rmse = jnp.sqrt(jnp.mean(err**2))
+    mae = jnp.mean(jnp.abs(err))
+    acc = jnp.mean((jnp.sign(y_pred) == jnp.sign(y_true)).astype(jnp.float32))
+    return Metrics(rmse=rmse, mae=mae, accuracy=acc)

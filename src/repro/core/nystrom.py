@@ -1,0 +1,110 @@
+"""Randomized Nystrom approximation (paper Algorithm 4, App. A.1) and the
+Woodbury solves used to apply it (Eqs. (15)/(16), App. A.1.1).
+
+``nystrom`` returns factors (U, lam) with U in R^{p x r} orthonormal and
+lam in R^r_{>=0} such that  K_hat = U diag(lam) U^T  approximates the psd
+input.  The approximation is never formed as a matrix.
+
+Two inverse-apply paths are provided, matching the paper:
+  * ``woodbury_inv_apply``       — Eq. (15), O(pr); fine in f64.
+  * ``stable_inv_apply``         — App. A.1.1 Cholesky variant, O(pr^2) setup
+                                   then O(pr) per apply; robust in f32 where
+                                   U^T U = I no longer holds after roundoff.
+  * ``woodbury_invsqrt_apply``   — Eq. (16), used inside get_L.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class NystromFactors(NamedTuple):
+    u: jax.Array  # (p, r) approximate top-r eigenvectors
+    lam: jax.Array  # (r,)  approximate top-r eigenvalues (>= 0, descending)
+
+
+def nystrom(key: jax.Array, m: jax.Array, rank: int) -> NystromFactors:
+    """Algorithm 4: randomized Nystrom approximation of a psd matrix m (p x p).
+
+    Cost O(p^2 r + p r^2); returns factors only.
+    """
+    p = m.shape[0]
+    omega = jax.random.normal(key, (p, rank), dtype=m.dtype)
+    omega, _ = jnp.linalg.qr(omega)  # orthonormal test matrix
+    y = m @ omega
+    return nystrom_from_sketch(y, omega, trace_hint=jnp.trace(m))
+
+
+def nystrom_from_sketch(
+    y: jax.Array, omega: jax.Array, trace_hint: jax.Array
+) -> NystromFactors:
+    """Algorithm 4 given a precomputed sketch y = M @ omega.
+
+    Split out so the sketch can come from the fused streaming kernel op
+    (never materializing M = K_BB) on huge blocks.
+    """
+    shift = jnp.finfo(y.dtype).eps * trace_hint
+    y_shift = y + shift * omega
+    gram = omega.T @ y_shift
+    gram = 0.5 * (gram + gram.T)
+    # Cholesky with escalating jitter: f32 sketches of nearly-singular blocks
+    # occasionally need more than the eps*tr(M) shift.  lax.cond keeps it jit-able.
+    chol = jnp.linalg.cholesky(gram)
+
+    def _retry(_):
+        jitter = 10.0 * jnp.finfo(y.dtype).eps * (jnp.trace(gram) + 1.0)
+        return jnp.linalg.cholesky(gram + jitter * jnp.eye(gram.shape[0], dtype=y.dtype))
+
+    chol = jax.lax.cond(
+        jnp.any(jnp.isnan(chol)), _retry, lambda _: chol, operand=None
+    )
+    b = jax.scipy.linalg.solve_triangular(chol, y_shift.T, lower=True).T
+    u, s, _ = jnp.linalg.svd(b, full_matrices=False)
+    lam = jnp.maximum(s * s - shift, 0.0)
+    return NystromFactors(u=u, lam=lam)
+
+
+def woodbury_inv_apply(f: NystromFactors, rho: jax.Array, g: jax.Array) -> jax.Array:
+    """(U diag(lam) U^T + rho I)^{-1} g in O(pr)  (Eq. (15))."""
+    utg = f.u.T @ g
+    core = utg / (f.lam + rho)[..., None] if g.ndim == 2 else utg / (f.lam + rho)
+    return f.u @ core + (g - f.u @ utg) / rho
+
+
+def stable_inv_apply_setup(f: NystromFactors, rho: jax.Array) -> jax.Array:
+    """Cholesky factor L of (rho diag(lam^{-1}) + U^T U) — App. A.1.1.
+
+    lam entries equal to zero are floored: a zero Nystrom eigenvalue means the
+    corresponding direction contributes nothing, so flooring to a huge inverse
+    is equivalent to dropping it.
+    """
+    lam_safe = jnp.maximum(f.lam, jnp.finfo(f.lam.dtype).tiny * 1e8)
+    gram = rho * jnp.diag(1.0 / lam_safe) + f.u.T @ f.u
+    return jnp.linalg.cholesky(0.5 * (gram + gram.T))
+
+
+def stable_inv_apply(
+    f: NystromFactors, rho: jax.Array, chol_l: jax.Array, g: jax.Array
+) -> jax.Array:
+    """(K_hat + rho I)^{-1} g via the f32-stable Cholesky path (App. A.1.1)."""
+    utg = f.u.T @ g
+    z = jax.scipy.linalg.solve_triangular(chol_l, utg, lower=True)
+    z = jax.scipy.linalg.solve_triangular(chol_l.T, z, lower=False)
+    return (g - f.u @ z) / rho
+
+
+def woodbury_invsqrt_apply(f: NystromFactors, rho: jax.Array, v: jax.Array) -> jax.Array:
+    """(U diag(lam) U^T + rho I)^{-1/2} v in O(pr)  (Eq. (16))."""
+    utv = f.u.T @ v
+    core = utv / jnp.sqrt(f.lam + rho)[..., None] if v.ndim == 2 else utv / jnp.sqrt(
+        f.lam + rho
+    )
+    return f.u @ core + (v - f.u @ utv) / jnp.sqrt(rho)
+
+
+def nystrom_dense(f: NystromFactors) -> jax.Array:
+    """Materialize K_hat (tests only)."""
+    return (f.u * f.lam) @ f.u.T

@@ -1,0 +1,138 @@
+"""Preconditioned conjugate gradient for full KRR (baseline, paper §4.1/§6).
+
+Preconditioners:
+  * "nystrom"    — rank-r Gaussian-Nystrom of the full K (Frangella et al.
+                   2023), sketch computed with the fused streaming matvec;
+                   supports the paper's "damped"/"regularization" rho modes.
+  * "rpcholesky" — rank-r randomly-pivoted-Cholesky factor (Diaz et al. 2023).
+  * "identity"   — plain CG.
+
+Per-iteration cost is the O(n^2 d) streamed K matvec — this is exactly the
+scaling wall the paper documents (Fig. 1: no PCG iteration finishes at
+n = 1e8), reproduced in benchmarks/bench_table2_scaling.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.krr import KRRProblem
+from repro.core.nystrom import NystromFactors, nystrom_from_sketch
+from repro.core.rpcholesky import rp_cholesky
+from repro.kernels import ops
+
+
+@dataclasses.dataclass
+class PCGResult:
+    w: jax.Array
+    iters: int
+    history: list[dict]
+    converged: bool
+    wall_time_s: float
+
+
+def _nystrom_full(problem: KRRProblem, rank: int, key: jax.Array) -> NystromFactors:
+    n = problem.n
+    omega = jax.random.normal(key, (n, rank), jnp.float32)
+    omega, _ = jnp.linalg.qr(omega)
+    sketch = ops.kernel_matvec(
+        problem.x,
+        problem.x,
+        omega,
+        kernel=problem.kernel,
+        sigma=problem.sigma,
+        backend=problem.backend,
+    )
+    # trace of a unit-diagonal kernel matrix is exactly n
+    return nystrom_from_sketch(sketch, omega, jnp.float32(n))
+
+
+def make_preconditioner(
+    problem: KRRProblem,
+    kind: str = "nystrom",
+    rank: int = 100,
+    rho_mode: str = "damped",
+    seed: int = 0,
+) -> Callable[[jax.Array], jax.Array]:
+    """Returns P^{-1} apply.  For Nystrom-type preconditioners:
+    P^{-1} v = U diag((lam_r + lam)/(lam_j + lam)) U^T v + (v - U U^T v)."""
+    lam = jnp.float32(problem.lam)
+    if kind == "identity":
+        return lambda v: v
+    if kind == "nystrom":
+        f = _nystrom_full(problem, rank, jax.random.PRNGKey(seed))
+    elif kind == "rpcholesky":
+        fmat, _ = rp_cholesky(
+            jax.random.PRNGKey(seed),
+            problem.x,
+            rank,
+            kernel=problem.kernel,
+            sigma=problem.sigma,
+            backend=problem.backend,
+        )
+        u, s, _ = jnp.linalg.svd(fmat, full_matrices=False)
+        f = NystromFactors(u=u, lam=s * s)
+    else:
+        raise ValueError(f"unknown preconditioner {kind!r}")
+
+    rho = lam + f.lam[-1] if rho_mode == "damped" else lam
+
+    def apply(v: jax.Array) -> jax.Array:
+        utv = f.u.T @ v
+        scaled = utv * ((f.lam[-1] + rho) / (f.lam + rho))
+        return f.u @ scaled + (v - f.u @ utv)
+
+    return apply
+
+
+def solve_pcg(
+    problem: KRRProblem,
+    *,
+    precond: str = "nystrom",
+    rank: int = 100,
+    rho_mode: str = "damped",
+    max_iters: int = 200,
+    tol: float = 1e-8,
+    seed: int = 0,
+    time_budget_s: float | None = None,
+) -> PCGResult:
+    t0 = time.perf_counter()
+    pinv = make_preconditioner(problem, precond, rank, rho_mode, seed)
+    matvec = jax.jit(problem.k_lam_matvec)
+    pinv = jax.jit(pinv)
+
+    y = problem.y
+    w = jnp.zeros_like(y)
+    r = y  # residual for w0 = 0
+    z = pinv(r)
+    p = z
+    rz = jnp.vdot(r, z)
+    ynorm = float(jnp.linalg.norm(y))
+    history: list[dict] = []
+    converged = False
+    it = 0
+    for it in range(1, max_iters + 1):
+        kp = matvec(p)
+        alpha = rz / jnp.vdot(p, kp)
+        w = w + alpha * p
+        r = r - alpha * kp
+        rel = float(jnp.linalg.norm(r)) / ynorm
+        history.append({"iter": it, "rel_residual": rel, "time_s": time.perf_counter() - t0})
+        if rel < tol:
+            converged = True
+            break
+        z = pinv(r)
+        rz_new = jnp.vdot(r, z)
+        p = z + (rz_new / rz) * p
+        rz = rz_new
+        if time_budget_s is not None and time.perf_counter() - t0 > time_budget_s:
+            break
+    return PCGResult(
+        w=w, iters=it, history=history, converged=converged,
+        wall_time_s=time.perf_counter() - t0,
+    )

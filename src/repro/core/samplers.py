@@ -1,0 +1,113 @@
+"""Coordinate-block sampling distributions (paper §2.4, §3.1, Def. 9).
+
+Two schemes, matching the paper's implementation:
+  * uniform  — the recommended default (§3.2).
+  * ARLS     — approximate ridge-leverage-score sampling; scores come from a
+               BLESS-style multi-round estimator (Rudi et al. 2018) capped at
+               dictionary size k = O(sqrt(n)) so estimation stays o(n^2).
+
+Samplers are closures ``key -> idx (b,)`` so solver steps stay jit-able.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+Sampler = Callable[[jax.Array], jax.Array]
+
+
+def uniform_sampler(n: int, b: int) -> Sampler:
+    """b distinct indices uniformly at random."""
+
+    def sample(key: jax.Array) -> jax.Array:
+        return jax.random.choice(key, n, (b,), replace=False)
+
+    return sample
+
+
+def arls_sampler(probs: jax.Array, b: int) -> Sampler:
+    """ARLS_c sampling (Def. 9): i.i.d. draws by rounded leverage scores.
+
+    We draw without replacement (the paper discards duplicates; fixed-shape
+    no-replacement sampling is the jit-friendly equivalent).
+    """
+    n = probs.shape[0]
+
+    def sample(key: jax.Array) -> jax.Array:
+        return jax.random.choice(key, n, (b,), replace=False, p=probs)
+
+    return sample
+
+
+def arls_probs(scores: jax.Array) -> jax.Array:
+    """Def. 9 rounding: p_i ∝ (l/n) * ceil(n * l_i / l), l = sum l_i."""
+    total = jnp.sum(scores)
+    p = jnp.ceil(scores * scores.shape[0] / jnp.maximum(total, 1e-30))
+    return p / jnp.sum(p)
+
+
+def exact_rls(k_mat: jax.Array, lam: jax.Array) -> jax.Array:
+    """Exact lambda-ridge leverage scores diag(K (K + lam I)^{-1}) — tests."""
+    n = k_mat.shape[0]
+    sol = jnp.linalg.solve(k_mat + lam * jnp.eye(n, dtype=k_mat.dtype), k_mat)
+    return jnp.diag(sol)
+
+
+def approx_rls_bless(
+    key: jax.Array,
+    x: jax.Array,
+    *,
+    kernel: str,
+    sigma: float,
+    lam: jax.Array,
+    k_cap: int | None = None,
+    rounds: int = 4,
+    backend: str = "auto",
+) -> jax.Array:
+    """BLESS-style approximate ridge leverage scores for all n points.
+
+    Multi-round coarse-to-fine estimation: round h uses regularization
+    lam_h = lam_0 / 4^h (geometric descent to the target lam) and a
+    dictionary resampled proportionally to the previous round's scores,
+    capped at k_cap = O(sqrt(n)) columns (paper §2.4 / §3.2 cap the same
+    way so BLESS stays ~O(n^2) overall).
+
+    Estimator with dictionary S (|S| = s, sampling probs q):
+        l_i(lam_h) ≈ (K_ii - k_iS (K_SS + s * lam_h * diag(q_S))^{-1} k_Si) / lam_h
+    clipped to [0, 1].  Shift-invariant kernels here have K_ii = 1.
+    """
+    n, _ = x.shape
+    if k_cap is None:
+        k_cap = max(16, int(math.sqrt(n)))
+    k_cap = min(k_cap, n)
+
+    lam = jnp.asarray(lam, jnp.float32)
+    lam0 = jnp.asarray(float(n), jnp.float32)
+    # geometric path lam0 -> lam over `rounds` rounds
+    ratio = (lam / lam0) ** (1.0 / max(rounds - 1, 1))
+
+    scores = jnp.full((n,), 1.0, jnp.float32)  # trivial overestimate l_i <= 1
+    keys = jax.random.split(key, rounds)
+    for h in range(rounds):
+        lam_h = lam0 * ratio**h if rounds > 1 else lam
+        q = scores / jnp.sum(scores)
+        idx = jax.random.choice(keys[h], n, (k_cap,), replace=False, p=q)
+        xs = x[idx]
+        q_s = q[idx] * k_cap  # inclusion-rate normalization
+        k_ss = ops.kernel_block(xs, xs, kernel=kernel, sigma=sigma, backend=backend)
+        reg = lam_h * jnp.diag(jnp.maximum(q_s, 1e-12))
+        chol = jnp.linalg.cholesky(
+            k_ss + reg + 1e-6 * jnp.eye(k_cap, dtype=k_ss.dtype)
+        )
+        # k_nS in chunks via the fused block op
+        k_ns = ops.kernel_block(x, xs, kernel=kernel, sigma=sigma, backend=backend)
+        sol = jax.scipy.linalg.cho_solve((chol, True), k_ns.T)  # (s, n)
+        quad = jnp.sum(k_ns.T * sol, axis=0)
+        scores = jnp.clip((1.0 - quad) / lam_h, 1e-12, 1.0)
+    return scores

@@ -1,0 +1,26 @@
+"""Skotch (Algorithm 2) — the non-accelerated variant of ASkotch.
+
+Thin wrapper: Skotch is exactly the ASkotch machinery with the Nesterov
+mixing disabled (see ``repro.core.askotch`` for the shared step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.askotch import ASkotchConfig, SolveResult, solve
+from repro.core.krr import KRRProblem
+
+
+def skotch_config(**kwargs) -> ASkotchConfig:
+    kwargs.setdefault("accelerated", False)
+    cfg = ASkotchConfig(**kwargs)
+    if cfg.accelerated:
+        cfg = dataclasses.replace(cfg, accelerated=False)
+    return cfg
+
+
+def solve_skotch(problem: KRRProblem, cfg: ASkotchConfig | None = None, **kw) -> SolveResult:
+    cfg = cfg or skotch_config()
+    cfg = dataclasses.replace(cfg, accelerated=False)
+    return solve(problem, cfg, **kw)

@@ -1,0 +1,93 @@
+"""Unified solver entry point — one `solve()` for every method the paper
+benchmarks (ASkotch / Skotch / PCG variants / Falkon / EigenPro / direct),
+so the benchmark harness and examples treat them interchangeably.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+from repro.core import askotch, direct, eigenpro, falkon, pcg
+from repro.core.krr import KRRProblem
+
+METHODS = (
+    "askotch",
+    "skotch",
+    "pcg-nystrom",
+    "pcg-rpcholesky",
+    "cg",
+    "falkon",
+    "eigenpro",
+    "direct",
+)
+
+
+@dataclasses.dataclass
+class SolveOutput:
+    method: str
+    w: jax.Array
+    history: list[dict]
+    info: dict[str, Any]
+    predict_fn: Any  # (x_test) -> predictions
+
+
+def solve(problem: KRRProblem, method: str = "askotch", **kw) -> SolveOutput:
+    if method in ("askotch", "skotch"):
+        cfg_kw = {
+            k: kw.pop(k)
+            for k in (
+                "block_size", "rank", "rho_mode", "sampling", "precond",
+                "mu", "nu", "stable_inv", "backend", "powering_iters",
+            )
+            if k in kw
+        }
+        cfg = askotch.ASkotchConfig(accelerated=(method == "askotch"), **cfg_kw)
+        res = askotch.solve(problem, cfg, **kw)
+        return SolveOutput(
+            method=method,
+            w=res.w,
+            history=res.history,
+            info={"iters": res.iters, "converged": res.converged, "wall_time_s": res.wall_time_s},
+            predict_fn=lambda xt: problem.predict(res.w, xt),
+        )
+    if method in ("pcg-nystrom", "pcg-rpcholesky", "cg"):
+        precond = {"pcg-nystrom": "nystrom", "pcg-rpcholesky": "rpcholesky", "cg": "identity"}[method]
+        res = pcg.solve_pcg(problem, precond=precond, **kw)
+        return SolveOutput(
+            method=method,
+            w=res.w,
+            history=res.history,
+            info={"iters": res.iters, "converged": res.converged, "wall_time_s": res.wall_time_s},
+            predict_fn=lambda xt: problem.predict(res.w, xt),
+        )
+    if method == "falkon":
+        res = falkon.solve_falkon(problem, **kw)
+        return SolveOutput(
+            method=method,
+            w=res.w,
+            history=res.history,
+            info={"iters": res.iters, "wall_time_s": res.wall_time_s, "m": res.w.shape[0]},
+            predict_fn=lambda xt: falkon.falkon_predict(problem, res, xt),
+        )
+    if method == "eigenpro":
+        res = eigenpro.solve_eigenpro(problem, **kw)
+        return SolveOutput(
+            method=method,
+            w=res.w,
+            history=res.history,
+            info={"iters": res.iters, "wall_time_s": res.wall_time_s},
+            predict_fn=lambda xt: problem.predict(res.w, xt),
+        )
+    if method == "direct":
+        w = direct.solve_direct(problem)
+        return SolveOutput(
+            method=method,
+            w=w,
+            history=[],
+            info={},
+            predict_fn=lambda xt: problem.predict(w, xt),
+        )
+    raise ValueError(f"unknown method {method!r}; available: {METHODS}")

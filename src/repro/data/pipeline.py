@@ -1,0 +1,45 @@
+"""Host data pipeline: deterministic, shardable, resumable.
+
+The iterator is a pure function of (seed, step), so its "state" is just the
+step counter — checkpoints store that one integer and resume is bit-exact.
+``device_put``s each batch with the dp sharding so multi-controller runs feed
+only their addressable shard (single-process here, same code path).
+"""
+
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax
+
+from repro.data import synthetic
+from repro.models.model_api import ArchConfig
+
+
+class LMDataPipeline:
+    def __init__(self, cfg: ArchConfig, batch: int, seq: int, seed: int = 0,
+                 start_step: int = 0, shardings=None):
+        self.cfg = cfg
+        self.batch = batch
+        self.seq = seq
+        self.seed = seed
+        self.step = start_step
+        self.shardings = shardings
+
+    def state(self) -> dict:
+        return {"seed": self.seed, "step": self.step}
+
+    @classmethod
+    def from_state(cls, cfg, batch, seq, state: dict, shardings=None):
+        return cls(cfg, batch, seq, seed=state["seed"], start_step=state["step"],
+                   shardings=shardings)
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        b = synthetic.batch_for(self.cfg, (self.batch, self.seq), self.seed, self.step)
+        self.step += 1
+        if self.shardings is not None:
+            b = jax.device_put(b, self.shardings)
+        return b

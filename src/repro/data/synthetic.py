@@ -1,0 +1,119 @@
+"""Deterministic synthetic data generators.
+
+LM side: a Zipf-ish Markov token stream (structured enough that the loss
+demonstrably falls during the example training runs) generated per-batch
+from a counter-based PRNG — fully deterministic given (seed, step), which is
+what makes checkpoint-resume bit-exact without storing data state beyond the
+step counter.
+
+KRR side: regression/classification problems of the paper's flavor (RBF-ish
+smooth targets + noise; taxi-like low-dimensional feature blobs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ----------------------------------------------------------------------------
+# LM tokens
+# ----------------------------------------------------------------------------
+
+
+def lm_batch(seed: int, step: int, batch: int, seq: int, vocab: int) -> dict:
+    """Deterministic (seed, step) -> {tokens, labels} int32 arrays.
+
+    Tokens follow a noisy arithmetic progression per sequence so that a model
+    can actually learn next-token structure (ppl drops quickly).
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    k1, k2, k3 = jax.random.split(key, 3)
+    start = jax.random.randint(k1, (batch, 1), 0, vocab)
+    stride = jax.random.randint(k2, (batch, 1), 1, 17)
+    pos = jnp.arange(seq + 1)[None, :]
+    clean = (start + stride * pos) % vocab
+    noise_mask = jax.random.bernoulli(k3, 0.05, (batch, seq + 1))
+    noise = jax.random.randint(jax.random.fold_in(k3, 1), (batch, seq + 1), 0, vocab)
+    toks = jnp.where(noise_mask, noise, clean).astype(jnp.int32)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def vlm_batch(seed: int, step: int, batch: int, seq: int, vocab: int,
+              prefix: int, d_model: int, dtype=jnp.bfloat16) -> dict:
+    base = lm_batch(seed, step, batch, seq - prefix, vocab)
+    key = jax.random.fold_in(jax.random.PRNGKey(seed ^ 0x5EED), step)
+    emb = 0.02 * jax.random.normal(key, (batch, prefix, d_model), jnp.float32)
+    labels = jnp.concatenate(
+        [-jnp.ones((batch, prefix), jnp.int32), base["labels"]], axis=1
+    )
+    return {
+        "tokens": base["tokens"],
+        "labels": labels,
+        "prefix_embeds": emb.astype(dtype),
+    }
+
+
+def encdec_batch(seed: int, step: int, batch: int, seq: int, vocab: int,
+                 d_model: int, dtype=jnp.bfloat16) -> dict:
+    base = lm_batch(seed, step, batch, seq, vocab)
+    key = jax.random.fold_in(jax.random.PRNGKey(seed ^ 0xF00D), step)
+    frames = 0.1 * jax.random.normal(key, (batch, seq, d_model), jnp.float32)
+    return {
+        "frames": frames.astype(dtype),
+        "tokens": base["tokens"],
+        "labels": base["labels"],
+    }
+
+
+def batch_for(cfg, shape_or_dims, seed: int, step: int) -> dict:
+    """Family-aware synthetic batch.  shape_or_dims: ShapeConfig or (B, T)."""
+    if hasattr(shape_or_dims, "global_batch"):
+        b, t = shape_or_dims.global_batch, shape_or_dims.seq_len
+    else:
+        b, t = shape_or_dims
+    dt = cfg.activation_dtype()
+    if cfg.family == "encdec":
+        return encdec_batch(seed, step, b, t, cfg.vocab_size, cfg.d_model, dt)
+    if cfg.num_prefix_tokens:
+        return vlm_batch(seed, step, b, t, cfg.vocab_size, cfg.num_prefix_tokens,
+                         cfg.d_model, dt)
+    return lm_batch(seed, step, b, t, cfg.vocab_size)
+
+
+# ----------------------------------------------------------------------------
+# KRR datasets (paper-flavor)
+# ----------------------------------------------------------------------------
+
+
+def krr_regression(seed: int, n: int, d: int, n_test: int = 0, noise: float = 0.1):
+    """Smooth nonlinear target + Gaussian noise (molecule-dataset flavor)."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n + n_test, d)).astype(np.float32)
+    w1 = rng.standard_normal((d,)).astype(np.float32) / np.sqrt(d)
+    w2 = rng.standard_normal((d,)).astype(np.float32) / np.sqrt(d)
+    f = np.sin(2.0 * (x @ w1)) + 0.5 * np.cos(x @ w2) + 0.2 * (x @ w1) ** 2
+    y = (f + noise * rng.standard_normal(n + n_test)).astype(np.float32)
+    return (
+        jnp.asarray(x[:n]), jnp.asarray(y[:n]),
+        jnp.asarray(x[n:]), jnp.asarray(y[n:]),
+    )
+
+
+def krr_classification(seed: int, n: int, d: int, n_test: int = 0):
+    """Binary +-1 labels from a smooth score (covtype/susy flavor)."""
+    x_tr, y_tr, x_te, y_te = krr_regression(seed, n, d, n_test, noise=0.05)
+    return x_tr, jnp.sign(y_tr), x_te, jnp.sign(y_te)
+
+
+def taxi_like(seed: int, n: int, d: int = 9):
+    """Low-dimensional trip-feature blobs with heavy-tailed targets
+    (taxi ride-duration flavor, §6.2)."""
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(-2, 2, size=(16, d)).astype(np.float32)
+    assign = rng.integers(0, 16, size=n)
+    x = centers[assign] + 0.3 * rng.standard_normal((n, d)).astype(np.float32)
+    base = np.linalg.norm(x[:, :2], axis=1) * 600.0
+    y = base + 120.0 * rng.standard_normal(n) + 50.0 * np.abs(x[:, 2])
+    return jnp.asarray(x), jnp.asarray(y.astype(np.float32))

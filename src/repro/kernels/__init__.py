@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes.
+
+The paper's per-iteration cost is dominated by streaming kernel-matrix
+evaluation (KeOps on GPU); here that is `kernel_matvec` (fused pairwise
+kernel x matvec) and `kernel_block` (fused block build), with `ops.py` as
+the jit'd dispatch layer and `ref.py` as the pure-jnp oracle.
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.kernel_block import kernel_block_pallas
+from repro.kernels.kernel_matvec import kernel_matvec_pallas
+
+__all__ = ["ops", "ref", "kernel_block_pallas", "kernel_matvec_pallas"]

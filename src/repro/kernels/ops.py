@@ -1,0 +1,65 @@
+"""Backend dispatch for the fused kernel ops.
+
+Backends:
+  "xla"       — chunked pure-jnp streaming (ref.py).  Default on CPU.
+  "pallas"    — compiled Pallas TPU kernels.  Default on TPU.
+  "interpret" — Pallas kernels in interpret mode (CPU correctness tests).
+  "auto"      — "pallas" if a TPU is present else "xla".
+
+All entry points share the contract: never materialize K(a, b) beyond one
+(block) tile, accumulate in f32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.kernel_block import kernel_block_pallas
+from repro.kernels.kernel_matvec import kernel_matvec_pallas
+
+
+def _resolve(backend: str) -> str:
+    if backend != "auto":
+        return backend
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def kernel_matvec(
+    a: jax.Array,
+    b: jax.Array,
+    v: jax.Array,
+    *,
+    kernel: str = "rbf",
+    sigma: float = 1.0,
+    backend: str = "auto",
+    chunk_a: int = 4096,
+    chunk_b: int = 8192,
+) -> jax.Array:
+    """out = K(a, b) @ v without materializing K."""
+    backend = _resolve(backend)
+    if backend == "xla":
+        return ref.kernel_matvec(
+            a, b, v, jnp.float32(sigma), kernel=kernel, chunk_a=chunk_a, chunk_b=chunk_b
+        )
+    return kernel_matvec_pallas(
+        a, b, v, kernel=kernel, sigma=float(sigma), interpret=(backend == "interpret")
+    )
+
+
+def kernel_block(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    kernel: str = "rbf",
+    sigma: float = 1.0,
+    backend: str = "auto",
+) -> jax.Array:
+    """Materialize K(a, b) (use for small/medium blocks only)."""
+    backend = _resolve(backend)
+    if backend == "xla":
+        return ref.kernel_block(a, b, jnp.float32(sigma), kernel=kernel)
+    return kernel_block_pallas(
+        a, b, kernel=kernel, sigma=float(sigma), interpret=(backend == "interpret")
+    )

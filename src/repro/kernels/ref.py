@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for the fused kernel ops.
+
+These are the correctness references for the Pallas kernels AND the default
+execution backend on CPU.  They stream over the dataset in fixed-size chunks
+(via lax.scan / lax.map) so that K is never materialized — the same contract
+as the Pallas kernels, minus the explicit VMEM tiling.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.kernels import kernel_fn
+
+
+def _pad_rows(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
+    n = x.shape[0]
+    pad = (-n) % multiple
+    if pad:
+        x = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    return x, n
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "chunk_a", "chunk_b"))
+def kernel_matvec(
+    a: jax.Array,
+    b: jax.Array,
+    v: jax.Array,
+    sigma: jax.Array,
+    *,
+    kernel: str = "rbf",
+    chunk_a: int = 4096,
+    chunk_b: int = 8192,
+) -> jax.Array:
+    """out = K(a, b) @ v, streamed.
+
+    a: (m, d), b: (n, d), v: (n, k) or (n,) -> out (m, k) or (m,).
+    Memory high-water mark is O(chunk_a * chunk_b) instead of O(m * n).
+    """
+    kfn = kernel_fn(kernel)
+    squeeze = v.ndim == 1
+    if squeeze:
+        v = v[:, None]
+    m = a.shape[0]
+    chunk_a = min(chunk_a, max(m, 1))
+    chunk_b = min(chunk_b, max(b.shape[0], 1))
+
+    bp, n = _pad_rows(b, chunk_b)
+    vp, _ = _pad_rows(v, chunk_b)
+    vp = jnp.where(
+        (jnp.arange(bp.shape[0]) < n)[:, None], vp, 0.0
+    )  # padded rows contribute exactly zero
+    nb = bp.shape[0] // chunk_b
+    b_chunks = bp.reshape(nb, chunk_b, b.shape[1])
+    v_chunks = vp.reshape(nb, chunk_b, v.shape[1])
+
+    ap, m0 = _pad_rows(a, chunk_a)
+    na = ap.shape[0] // chunk_a
+    a_chunks = ap.reshape(na, chunk_a, a.shape[1])
+
+    def row_block(a_blk):
+        def body(acc, bv):
+            b_blk, v_blk = bv
+            return acc + kfn(a_blk, b_blk, sigma) @ v_blk, None
+
+        init = jnp.zeros((a_blk.shape[0], v.shape[1]), jnp.float32)
+        out, _ = lax.scan(body, init, (b_chunks, v_chunks))
+        return out
+
+    out = lax.map(row_block, a_chunks).reshape(na * chunk_a, v.shape[1])[:m0]
+    return out[:, 0] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnames=("kernel",))
+def kernel_block(
+    a: jax.Array, b: jax.Array, sigma: jax.Array, *, kernel: str = "rbf"
+) -> jax.Array:
+    """Materialize K(a, b).  Reference for the Pallas block-build kernel."""
+    return kernel_fn(kernel)(a, b, sigma)

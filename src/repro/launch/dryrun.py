@@ -1,0 +1,324 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# CPU-backend workaround (before any jax import): XLA's while-loop-invariant
+# code motion hoists dtype converts out of scan bodies, materializing f32
+# copies of whole parameter/activation stacks — a memory-accounting artifact
+# of the host pipeline that the TPU scheduler doesn't exhibit.
+os.environ["XLA_FLAGS"] += " --xla_disable_hlo_passes=while-loop-invariant-code-motion"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell.
+
+For each cell this records memory_analysis(), cost_analysis(), and the parsed
+collective schedule into one JSON under --out (resumable; one file per cell).
+
+Because XLA cost analysis counts while-loop bodies once, each single-pod cell
+additionally compiles two small UNROLLED probes (L=1/L=2 layers — periods for
+the hybrid — with microbatches=1 and unchunked attention) and extrapolates
+per-layer FLOPs/bytes/collective-bytes to the full depth (§Roofline inputs).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun \
+      --arch all --shape all --mesh both --out results/dryrun [--skip-existing]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import askotch_krr
+from repro.configs.base import ARCH_IDS, get_config
+from repro.distributed.krr_dist import (
+    DistKRRConfig,
+    abstract_dist_inputs,
+    make_dist_askotch_step,
+)
+from repro.distributed.meshes import (
+    default_rules,
+    logical_rules,
+    named_shardings,
+    sanitized_shardings,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models.model_api import (
+    ALL_SHAPES,
+    SHAPES_BY_NAME,
+    abstract_params,
+    get_model,
+    param_pspecs,
+    shape_applicable,
+)
+from repro.roofline import analyze
+from repro.training.optimizers import make_optimizer
+from repro.training.schedules import warmup_cosine
+from repro.training.train_step import make_train_step
+
+KRR_ARCH = "askotch-krr-taxi-100m"
+
+
+def _batch_pspecs(binputs: dict) -> dict:
+    return {
+        name: P("dp", None, None) if s.ndim == 3 else P("dp", None)
+        for name, s in binputs.items()
+    }
+
+
+def _rules_for(cfg, mesh):
+    rules = default_rules(mesh)
+    if getattr(cfg, "fsdp_over_pod", False) and "pod" in mesh.axis_names:
+        rules = dict(rules)
+        rules["fsdp"] = ("pod", "data")
+    return rules
+
+
+def lower_cell(cfg, shape, mesh):
+    """Lower one (arch x shape) cell on `mesh`; returns (lowered, donate_info)."""
+    impl = get_model(cfg)
+    rules = _rules_for(cfg, mesh)
+    params_struct = abstract_params(cfg)
+    pspecs = param_pspecs(cfg)
+    params_sh = sanitized_shardings(mesh, pspecs, params_struct, rules)
+    binputs = impl.input_specs(cfg, shape)
+    b_sh = sanitized_shardings(mesh, _batch_pspecs(binputs), binputs, rules)
+
+    if shape.kind == "train":
+        opt = make_optimizer(cfg.optimizer, warmup_cosine(3e-4, 2000, 100_000))
+        opt_struct = jax.eval_shape(opt.init, params_struct)
+        opt_sh = sanitized_shardings(
+            mesh, opt.state_specs(pspecs, params_struct), opt_struct, rules
+        )
+        train_step = make_train_step(cfg, opt)
+
+        def stepfn(params, opt_state, batch, step):
+            with logical_rules(rules):
+                return train_step(params, opt_state, batch, step)
+
+        with mesh:
+            jitted = jax.jit(
+                stepfn,
+                in_shardings=(params_sh, opt_sh, b_sh, NamedSharding(mesh, P())),
+                out_shardings=(params_sh, opt_sh, None),
+                donate_argnums=(0, 1),
+            )
+            return jitted.lower(
+                params_struct, opt_struct, binputs, jax.ShapeDtypeStruct((), jnp.int32)
+            )
+
+    if shape.kind == "prefill":
+
+        def prefill(params, batch):
+            with logical_rules(rules):
+                return impl.prefill(params, batch, cfg)
+
+        cache_struct = impl.init_cache(
+            cfg, shape.global_batch, shape.seq_len, abstract=True
+        )
+        cache_sh = sanitized_shardings(
+            mesh, impl.cache_specs(cfg, shape.global_batch, shape.seq_len),
+            cache_struct, rules,
+        )
+        with mesh:
+            jitted = jax.jit(
+                prefill, in_shardings=(params_sh, b_sh), out_shardings=(None, cache_sh)
+            )
+            return jitted.lower(params_struct, binputs)
+
+    # decode: one new token against a seq_len cache
+    cache_struct = impl.init_cache(cfg, shape.global_batch, shape.seq_len, abstract=True)
+    cache_sh = sanitized_shardings(
+        mesh, impl.cache_specs(cfg, shape.global_batch, shape.seq_len),
+        cache_struct, rules,
+    )
+
+    def decode(params, cache, batch):
+        with logical_rules(rules):
+            return impl.decode_step(params, cache, batch, cfg)
+
+    with mesh:
+        jitted = jax.jit(
+            decode,
+            in_shardings=(params_sh, cache_sh, b_sh),
+            out_shardings=(None, cache_sh),
+            donate_argnums=(1,),
+        )
+        return jitted.lower(params_struct, cache_struct, binputs)
+
+
+def lower_krr_cell(mesh):
+    kcfg = askotch_krr.config()
+    dcfg = DistKRRConfig(
+        n=kcfg.n, d=kcfg.d, kernel=kcfg.kernel, sigma=kcfg.sigma,
+        lam_unscaled=kcfg.lam_unscaled, block_size=kcfg.block_size, rank=kcfg.rank,
+    )
+    step, sh = make_dist_askotch_step(mesh, dcfg)
+    state, x, y = abstract_dist_inputs(dcfg)
+    with mesh:
+        jitted = jax.jit(
+            step,
+            in_shardings=(sh["state"], sh["x"], sh["y"]),
+            out_shardings=sh["state"],
+            donate_argnums=(0,),
+        )
+        return jitted.lower(state, x, y), dcfg
+
+
+def _probe_cfg(cfg, units: int):
+    """Small unrolled config for cost extrapolation."""
+    fields = dict(
+        microbatches_train=1, scan_unroll=True, attn_q_chunk=1 << 30,
+        moe_dispatch_tokens=1 << 30, remat="none",
+    )
+    if cfg.family == "hybrid":
+        fields["num_layers"] = units * cfg.attn_period
+    elif cfg.family == "encdec":
+        fields["num_layers"] = units
+        fields["encoder_layers"] = units
+    else:
+        fields["num_layers"] = units
+    return dataclasses.replace(cfg, **fields)
+
+
+def _units(cfg) -> int:
+    return cfg.num_layers // cfg.attn_period if cfg.family == "hybrid" else cfg.num_layers
+
+
+def compile_and_measure(lowered) -> tuple[dict, analyze.CellCost]:
+    compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    mem = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+    }
+    return mem, analyze.cell_cost(compiled)
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, probes: bool) -> dict:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+
+    if arch == KRR_ARCH:
+        lowered, dcfg = lower_krr_cell(mesh)
+        mem, cost = compile_and_measure(lowered)
+        rec.update(status="ok", memory=mem, seconds=round(time.time() - t0, 1))
+        rec["cost_raw"] = dataclasses.asdict(cost)
+        # analytic FLOPs for the fused matvecs (inner chunk scans count once)
+        chips = mesh.devices.size
+        b, n, d, r, it = (dcfg.block_size, dcfg.n, dcfg.d, dcfg.rank,
+                          10)  # powering iters
+        flops = (
+            n * b * (3 * d + 2)  # g_B fused matvec
+            + b * b * (3 * d + 2 * r)  # Nystrom sketch
+            + it * b * b * (3 * d + 2)  # powering matvecs
+        )
+        rec["cost_extrapolated"] = {
+            "flops": flops / chips,
+            "bytes_accessed": cost.bytes_accessed,
+            "coll_bytes": cost.coll_bytes,
+            "coll_breakdown": cost.coll_breakdown,
+            "note": "flops analytic (fused matvec chunk-scan bodies count once)",
+        }
+        rec["model_flops_total"] = flops
+        return rec
+
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    lowered = lower_cell(cfg, shape, mesh)
+    mem, cost_raw = compile_and_measure(lowered)
+    rec.update(
+        status="ok",
+        memory=mem,
+        n_params=cfg.n_params(),
+        n_active_params=cfg.n_active_params(),
+        cost_raw=dataclasses.asdict(cost_raw),
+    )
+
+    if probes:
+        try:
+            c1 = _probe_cfg(cfg, 1)
+            c2 = _probe_cfg(cfg, 2)
+            _, p1 = compile_and_measure(lower_cell(c1, shape, mesh))
+            _, p2 = compile_and_measure(lower_cell(c2, shape, mesh))
+            full = analyze.extrapolate(p1, p2, 1, _units(cfg) - 1)
+            rec["cost_extrapolated"] = dataclasses.asdict(full)
+            rec["probe_raw"] = {
+                "l1": dataclasses.asdict(p1), "l2": dataclasses.asdict(p2),
+            }
+        except Exception as e:  # probes are best-effort
+            rec["probe_error"] = f"{type(e).__name__}: {e}"
+
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    rec["tokens"] = tokens
+    rec["model_flops_total"] = analyze.model_flops(
+        cfg.n_params(), cfg.n_active_params(), tokens, shape.kind == "train"
+    )
+    rec["seconds"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) + [KRR_ARCH] if args.arch == "all" else args.arch.split(",")
+    shapes = [s.name for s in ALL_SHAPES] if args.shape == "all" else args.shape.split(",")
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        arch_shapes = ["krr_step"] if arch == KRR_ARCH else shapes
+        for shape_name in arch_shapes:
+            for mesh_name in meshes:
+                tag = f"{arch}__{shape_name}__{mesh_name}".replace("/", "_")
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip] {tag}", flush=True)
+                    continue
+                try:
+                    # probes only on the single-pod mesh (roofline table source)
+                    rec = run_cell(
+                        arch, shape_name, mesh_name,
+                        probes=(not args.no_probes) and mesh_name == "single",
+                    )
+                except Exception as e:
+                    rec = {
+                        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                        "status": "failed",
+                        "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-2000:],
+                    }
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec.get("status")
+                mem = rec.get("memory", {})
+                gb = 1 / 2**30
+                extra = (
+                    f" arg={mem.get('argument_bytes', 0)*gb:.2f}G"
+                    f" temp={mem.get('temp_bytes', 0)*gb:.2f}G"
+                    if mem else f" ({rec.get('reason') or rec.get('error', '')[:80]})"
+                )
+                print(f"[{status}] {tag}{extra} {rec.get('seconds', 0)}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,378 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356) — family "encdec".
+
+The conv audio frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, T, d) directly (as if produced by
+the two conv layers); sinusoidal positions are added on the fly (the real
+model's learned 448-position table doesn't extend to the assigned 4k/32k
+shapes — deviation noted in DESIGN.md).
+
+Encoder: bidirectional self-attention + GELU MLP, pre-LayerNorm.
+Decoder: causal self-attention + cross-attention over encoder output + GELU
+MLP.  Decode step carries a self-attention KV cache plus fixed cross K/V
+computed at prefill.  Whisper ties embedding and LM head.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.meshes import logical_constraint
+from repro.models import layers as L
+from repro.models.model_api import (
+    ArchConfig,
+    ModelImpl,
+    ParamDefs,
+    ShapeConfig,
+    register_family,
+)
+
+
+def param_defs(cfg: ArchConfig) -> ParamDefs:
+    d, h, kv, hd, ff = cfg.d_model, cfg.num_heads, cfg.kv_heads, cfg.hd, cfg.d_ff
+    ne, nd = cfg.encoder_layers, cfg.num_layers
+    vp = cfg.padded_vocab()
+    atp = "tp" if h % 16 == 0 else None  # whisper-base: 8 heads -> replicated
+    defs: ParamDefs = {
+        "embed": ((vp, d), P("tp", "fsdp")),  # tied: used for both ends
+        "enc_final_scale": ((d,), P(None)),
+        "enc_final_bias": ((d,), P(None)),
+        "dec_final_scale": ((d,), P(None)),
+        "dec_final_bias": ((d,), P(None)),
+    }
+
+    def attn_defs(n, prefix):
+        return {
+            f"{prefix}ln1_scale": ((n, d), P(None, None)),
+            f"{prefix}ln1_bias": ((n, d), P(None, None)),
+            f"{prefix}wq": ((n, d, h * hd), P(None, "fsdp", atp)),
+            f"{prefix}wk": ((n, d, kv * hd), P(None, "fsdp", None)),
+            f"{prefix}wv": ((n, d, kv * hd), P(None, "fsdp", None)),
+            f"{prefix}wo": ((n, h * hd, d), P(None, atp, "fsdp")),
+        }
+
+    def mlp_defs(n, prefix):
+        return {
+            f"{prefix}lnm_scale": ((n, d), P(None, None)),
+            f"{prefix}lnm_bias": ((n, d), P(None, None)),
+            f"{prefix}w_up": ((n, d, ff), P(None, "fsdp", "tp")),
+            f"{prefix}b_up": ((n, ff), P(None, "tp")),
+            f"{prefix}w_down": ((n, ff, d), P(None, "tp", "fsdp")),
+            f"{prefix}b_down": ((n, d), P(None, None)),
+        }
+
+    enc: ParamDefs = {}
+    enc.update(attn_defs(ne, ""))
+    enc.update(mlp_defs(ne, ""))
+    for k, v in enc.items():
+        defs[f"encoder.{k}"] = v
+
+    dec: ParamDefs = {}
+    dec.update(attn_defs(nd, ""))  # self-attention
+    dec.update(
+        {
+            "ln2_scale": ((nd, d), P(None, None)),
+            "ln2_bias": ((nd, d), P(None, None)),
+            "xwq": ((nd, d, h * hd), P(None, "fsdp", atp)),
+            "xwk": ((nd, d, kv * hd), P(None, "fsdp", None)),
+            "xwv": ((nd, d, kv * hd), P(None, "fsdp", None)),
+            "xwo": ((nd, h * hd, d), P(None, atp, "fsdp")),
+        }
+    )
+    dec.update(mlp_defs(nd, ""))
+    for k, v in dec.items():
+        defs[f"decoder.{k}"] = v
+    return defs
+
+
+def _sinusoid(t: int, d: int, dtype) -> jax.Array:
+    pos = jnp.arange(t, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-jnp.log(10000.0) * dim / max(d // 2 - 1, 1))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def _ln(x, scale, bias):
+    return L.layer_norm(x, scale, bias)
+
+
+def _mlp(cfg, x, lp):
+    hidden = jax.nn.gelu(
+        jnp.einsum("btd,df->btf", x, lp["w_up"].astype(x.dtype))
+        + lp["b_up"].astype(x.dtype)
+    )
+    hidden = logical_constraint(hidden, P("dp", None, "tp"))
+    return (
+        jnp.einsum("btf,fd->btd", hidden, lp["w_down"].astype(x.dtype))
+        + lp["b_down"].astype(x.dtype)
+    )
+
+
+def _self_attn(cfg, x, lp, causal, prefix=""):
+    h = _ln(x, lp[f"{prefix}ln1_scale"], lp[f"{prefix}ln1_bias"])
+    b, t, _ = h.shape
+    q = jnp.einsum("btd,dk->btk", h, lp[f"{prefix}wq"].astype(h.dtype))
+    k = jnp.einsum("btd,dk->btk", h, lp[f"{prefix}wk"].astype(h.dtype))
+    v = jnp.einsum("btd,dk->btk", h, lp[f"{prefix}wv"].astype(h.dtype))
+    q = q.reshape(b, t, cfg.num_heads, cfg.hd)
+    k = k.reshape(b, t, cfg.kv_heads, cfg.hd)
+    v = v.reshape(b, t, cfg.kv_heads, cfg.hd)
+    attn = L.attention(q, k, v, causal=causal, q_chunk=cfg.attn_q_chunk)
+    return x + L.out_project(attn, lp, prefix=prefix), (k, v)
+
+
+def _cross_attn(cfg, x, enc_k, enc_v, lp):
+    h = _ln(x, lp["ln2_scale"], lp["ln2_bias"])
+    b, t, _ = h.shape
+    q = jnp.einsum("btd,dk->btk", h, lp["xwq"].astype(h.dtype)).reshape(
+        b, t, cfg.num_heads, cfg.hd
+    )
+    attn = L.attention(q, enc_k, enc_v, causal=False, q_chunk=cfg.attn_q_chunk)
+    return x + jnp.einsum(
+        "btk,kd->btd",
+        attn.reshape(b, t, cfg.num_heads * cfg.hd),
+        lp["xwo"].astype(h.dtype),
+    )
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+def encode(cfg: ArchConfig, params: dict, frames: jax.Array) -> jax.Array:
+    """frames: (B, T, d) precomputed frame embeddings (frontend stub)."""
+    x = frames.astype(cfg.activation_dtype())
+    x = x + _sinusoid(x.shape[1], cfg.d_model, x.dtype)[None]
+    x = logical_constraint(x, P("dp", None, None))
+
+    def block(x, lp):
+        x, _ = _self_attn(cfg, x, lp, causal=False)
+        x = x + _mlp(cfg, _ln(x, lp["lnm_scale"], lp["lnm_bias"]), lp)
+        return logical_constraint(x, P("dp", None, None))
+
+    blk = _remat(cfg, block)
+
+    def body(carry, lp):
+        return blk(carry, lp), None
+
+    x, _ = lax.scan(
+        body, x, params["encoder"],
+        unroll=cfg.encoder_layers if cfg.scan_unroll else 1,
+    )
+    return _ln(x, params["enc_final_scale"], params["enc_final_bias"])
+
+
+def _cross_kv(cfg, params, enc_out):
+    """Per-decoder-layer cross K/V from the encoder output."""
+    b, s, _ = enc_out.shape
+
+    def one(lp):
+        k = jnp.einsum("bsd,dk->bsk", enc_out, lp["xwk"].astype(enc_out.dtype))
+        v = jnp.einsum("bsd,dk->bsk", enc_out, lp["xwv"].astype(enc_out.dtype))
+        return (
+            k.reshape(b, s, cfg.kv_heads, cfg.hd),
+            v.reshape(b, s, cfg.kv_heads, cfg.hd),
+        )
+
+    return jax.vmap(one)(params["decoder"])  # (Ld, B, S, KV, hd) x2
+
+
+def decode_train(cfg, params, tokens, enc_out):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.activation_dtype())
+    x = x + _sinusoid(x.shape[1], cfg.d_model, x.dtype)[None]
+    x = logical_constraint(x, P("dp", None, None))
+    xk, xv = _cross_kv(cfg, params, enc_out)
+
+    def block(x, scanned):
+        lp, ek, ev = scanned
+        x, _ = _self_attn(cfg, x, lp, causal=True)
+        x = _cross_attn(cfg, x, ek, ev, lp)
+        x = x + _mlp(cfg, _ln(x, lp["lnm_scale"], lp["lnm_bias"]), lp)
+        return logical_constraint(x, P("dp", None, None))
+
+    blk = _remat(cfg, block)
+
+    def body(carry, scanned):
+        return blk(carry, scanned), None
+
+    x, _ = lax.scan(
+        body, x, (params["decoder"], xk, xv),
+        unroll=cfg.num_layers if cfg.scan_unroll else 1,
+    )
+    x = _ln(x, params["dec_final_scale"], params["dec_final_bias"])
+    logits = jnp.einsum("btd,vd->btv", x, params["embed"].astype(x.dtype))
+    return logical_constraint(logits, P("dp", None, "tp"))
+
+
+def loss_fn(params, batch, cfg):
+    enc_out = encode(cfg, params, batch["frames"])
+    logits = decode_train(cfg, params, batch["tokens"], enc_out).astype(jnp.float32)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    loss = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"loss": loss}
+
+
+def prefill(params, batch, cfg):
+    """Encode + decoder prefill over the given decoder tokens."""
+    enc_out = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    xk, xv = _cross_kv(cfg, params, enc_out)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.activation_dtype())
+    x = x + _sinusoid(t, cfg.d_model, x.dtype)[None]
+
+    def body(carry, scanned):
+        lp, ek, ev = scanned
+        x = carry
+        x, (k, v) = _self_attn(cfg, x, lp, causal=True)
+        x = _cross_attn(cfg, x, ek, ev, lp)
+        x = x + _mlp(cfg, _ln(x, lp["lnm_scale"], lp["lnm_bias"]), lp)
+        return logical_constraint(x, P("dp", None, None)), (k, v)
+
+    x, (ks, vs) = lax.scan(
+        body, x, (params["decoder"], xk, xv),
+        unroll=cfg.num_layers if cfg.scan_unroll else 1,
+    )
+    x = _ln(x, params["dec_final_scale"], params["dec_final_bias"])
+    logits = jnp.einsum("btd,vd->btv", x[:, -1:], params["embed"].astype(x.dtype))
+    cache = {
+        "self_k": ks, "self_v": vs,  # (Ld, B, T, KV, hd)
+        "cross_k": xk, "cross_v": xv,  # (Ld, B, S, KV, hd)
+        "cross_len": jnp.array(enc_out.shape[1], jnp.int32),
+        "pos": jnp.array(t, jnp.int32),
+    }
+    return logical_constraint(logits, P("dp", None, "tp")), cache
+
+
+def decode_step(params, cache, batch, cfg):
+    tokens = batch["tokens"]  # (B, 1)
+    pos = cache["pos"]
+    cross_len = cache["cross_len"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.activation_dtype())
+    t_pos = _sinusoid_at(pos, cfg.d_model, x.dtype)
+    x = x + t_pos[None, None, :]
+
+    def body(carry, scanned):
+        x, k_all, v_all = carry
+        lp, ek, ev, layer = scanned
+        kc = lax.dynamic_index_in_dim(k_all, layer, axis=0, keepdims=False)
+        vc = lax.dynamic_index_in_dim(v_all, layer, axis=0, keepdims=False)
+        h = _ln(x, lp["ln1_scale"], lp["ln1_bias"])
+        b = h.shape[0]
+        q = jnp.einsum("btd,dk->btk", h, lp["wq"].astype(h.dtype)).reshape(
+            b, 1, cfg.num_heads, cfg.hd
+        )
+        k = jnp.einsum("btd,dk->btk", h, lp["wk"].astype(h.dtype)).reshape(
+            b, 1, cfg.kv_heads, cfg.hd
+        )
+        v = jnp.einsum("btd,dk->btk", h, lp["wv"].astype(h.dtype)).reshape(
+            b, 1, cfg.kv_heads, cfg.hd
+        )
+        kc = lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=1)
+        vc = lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=1)
+        attn = L.decode_attention(q, kc, vc, pos + 1)
+        x = x + L.out_project(attn, lp)
+        # cross attention with explicit length mask (cache may be padded)
+        h2 = _ln(x, lp["ln2_scale"], lp["ln2_bias"])
+        q2 = jnp.einsum("btd,dk->btk", h2, lp["xwq"].astype(h2.dtype)).reshape(
+            b, 1, cfg.num_heads, cfg.hd
+        )
+        xattn = L.decode_attention(q2, ek, ev, cross_len)
+        x = x + jnp.einsum(
+            "btk,kd->btd",
+            xattn.reshape(b, 1, cfg.num_heads * cfg.hd),
+            lp["xwo"].astype(h2.dtype),
+        )
+        x = x + _mlp(cfg, _ln(x, lp["lnm_scale"], lp["lnm_bias"]), lp)
+        k_all = lax.dynamic_update_slice_in_dim(
+            k_all, kc[None].astype(k_all.dtype), layer, axis=0)
+        v_all = lax.dynamic_update_slice_in_dim(
+            v_all, vc[None].astype(v_all.dtype), layer, axis=0)
+        return (x, k_all, v_all), None
+
+    (x, ks, vs), _ = lax.scan(
+        body, (x, cache["self_k"], cache["self_v"]),
+        (params["decoder"], cache["cross_k"], cache["cross_v"],
+         jnp.arange(cfg.num_layers)),
+        unroll=cfg.num_layers if cfg.scan_unroll else 1,
+    )
+    x = _ln(x, params["dec_final_scale"], params["dec_final_bias"])
+    logits = jnp.einsum("btd,vd->btv", x, params["embed"].astype(x.dtype))
+    new_cache = dict(cache)
+    new_cache.update({"self_k": ks, "self_v": vs, "pos": pos + 1})
+    return logical_constraint(logits, P("dp", None, "tp")), new_cache
+
+
+def _sinusoid_at(pos, d, dtype):
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    inv = jnp.exp(-jnp.log(10000.0) * dim / max(d // 2 - 1, 1))
+    ang = pos.astype(jnp.float32) * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq: int, abstract: bool = False):
+    nd = cfg.num_layers
+    dt = cfg.activation_dtype()
+    self_shape = (nd, batch, seq, cfg.kv_heads, cfg.hd)
+    cross_shape = (nd, batch, seq, cfg.kv_heads, cfg.hd)
+    if abstract:
+        mk = lambda s: jax.ShapeDtypeStruct(s, dt)  # noqa: E731
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+    else:
+        mk = lambda s: jnp.zeros(s, dt)  # noqa: E731
+        pos = jnp.array(seq - 1, jnp.int32)
+    return {
+        "self_k": mk(self_shape), "self_v": mk(self_shape),
+        "cross_k": mk(cross_shape), "cross_v": mk(cross_shape),
+        "cross_len": pos if abstract else jnp.array(seq, jnp.int32),
+        "pos": pos,
+    }
+
+
+def cache_specs(cfg: ArchConfig, batch: int, seq: int):
+    kv = P(None, "dp", "tp", None, None)
+    return {
+        "self_k": kv, "self_v": kv, "cross_k": kv, "cross_v": kv,
+        "cross_len": P(), "pos": P(),
+    }
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict[str, Any]:
+    gb, t = shape.global_batch, shape.seq_len
+    dt = cfg.activation_dtype()
+    frames = jax.ShapeDtypeStruct((gb, t, cfg.d_model), dt)
+    i32 = jnp.int32
+    if shape.kind == "train":
+        return {
+            "frames": frames,
+            "tokens": jax.ShapeDtypeStruct((gb, t), i32),
+            "labels": jax.ShapeDtypeStruct((gb, t), i32),
+        }
+    if shape.kind == "prefill":
+        return {"frames": frames, "tokens": jax.ShapeDtypeStruct((gb, t), i32)}
+    return {"tokens": jax.ShapeDtypeStruct((gb, 1), i32)}
+
+
+register_family(
+    "encdec",
+    ModelImpl(
+        param_defs=param_defs,
+        loss_fn=loss_fn,
+        prefill=prefill,
+        decode_step=decode_step,
+        init_cache=init_cache,
+        cache_specs=cache_specs,
+        input_specs=input_specs,
+    ),
+)

@@ -1,0 +1,353 @@
+"""Shared transformer building blocks (pure functions over param dicts).
+
+Numerics policy: parameters stored in cfg.param_dtype, computation in
+cfg.dtype (bf16 by default), softmax/norm statistics and the attention
+log-sum-exp always in f32, residual stream in cfg.dtype.
+
+Attention is q-chunked (exact, not windowed): scores are materialized per
+(query-chunk x full key length) tile so the per-device transient is bounded
+— this is what makes the 32k prefill cells fit HBM in the dry-run and is the
+XLA analogue of flash-attention tiling (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.meshes import logical_constraint
+from repro.models.model_api import ArchConfig
+
+# ----------------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    if x.dtype == jnp.float32:
+        var = jnp.mean(x * x, axis=-1, keepdims=True)
+        return x * lax.rsqrt(var + eps) * scale.astype(x.dtype)
+    # bf16 path: square in bf16, accumulate the mean in f32.  Avoiding the
+    # explicit x.astype(f32) matters: XLA hoists that convert out of the
+    # backward scan and materializes an f32 copy of the whole saved residual
+    # stack (4 GiB/device at 405B).  bf16 squares cost ~1e-2 relative error
+    # on the variance, which only perturbs the normalization scale.
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True, dtype=jnp.float32)
+    r = lax.rsqrt(var + eps).astype(x.dtype)
+    return x * r * scale.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    y = (x32 - mu) * lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * scale.astype(x.dtype) + bias.astype(x.dtype)
+
+
+def apply_norm(cfg: ArchConfig, x: jax.Array, params: dict, prefix: str) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layer_norm(x, params[f"{prefix}_scale"], params[f"{prefix}_bias"])
+    return rms_norm(x, params[f"{prefix}_scale"])
+
+
+# ----------------------------------------------------------------------------
+# rotary embeddings (full or partial fraction — chatglm3 uses fraction=0.5)
+# ----------------------------------------------------------------------------
+
+
+def rope_frequencies(hd: int, fraction: float, theta: float) -> jax.Array:
+    rot = int(hd * fraction) // 2 * 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, *, fraction: float, theta: float
+) -> jax.Array:
+    """x: (B, T, H, hd), positions: (B, T) or (T,)."""
+    hd = x.shape[-1]
+    rot = int(hd * fraction) // 2 * 2
+    if rot == 0:
+        return x
+    freqs = rope_frequencies(hd, fraction, theta)  # (rot/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[:, :, None].astype(jnp.float32) * freqs[None, None, :]
+    cos = jnp.cos(angles)[:, :, None, :]  # (B, T, 1, rot/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., ::2], x_rot[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([rotated.astype(x.dtype), x_pass], axis=-1)
+
+
+# ----------------------------------------------------------------------------
+# attention
+# ----------------------------------------------------------------------------
+
+
+def repeat_kv(k: jax.Array, num_heads: int) -> jax.Array:
+    """(B, S, KV, hd) -> (B, S, H, hd) by repeating groups (GQA -> MHA view)."""
+    b, s, kv, hd = k.shape
+    if kv == num_heads:
+        return k
+    reps = num_heads // kv
+    return jnp.repeat(k, reps, axis=2)
+
+
+def attention(
+    q: jax.Array,  # (B, T, H, hd)
+    k: jax.Array,  # (B, S, KV, hd)
+    v: jax.Array,  # (B, S, KV, hd)
+    *,
+    causal: bool,
+    q_offset: jax.Array | int = 0,  # absolute position of q[0] (decode/chunking)
+    q_chunk: int = 512,
+    kv_sharded: bool = False,
+) -> jax.Array:
+    """Exact attention, q-chunked.  Returns (B, T, H, hd) in q.dtype."""
+    b, t, h, hd = q.shape
+    s = k.shape[1]
+    k = repeat_kv(k, h)
+    v = repeat_kv(v, h)
+    scale = hd**-0.5
+    kv_spec = P("dp", "fsdp" if kv_sharded else None, "tp", None)
+    k = logical_constraint(k, kv_spec)
+    v = logical_constraint(v, kv_spec)
+
+    def one_chunk(qc: jax.Array, start: jax.Array) -> jax.Array:
+        # qc: (B, tc, H, hd)
+        scores = jnp.einsum(
+            "bthd,bshd->bhts", qc, k, preferred_element_type=jnp.float32
+        ) * scale  # (B, H, tc, S) f32
+        if causal:
+            qpos = start + jnp.arange(qc.shape[1])
+            kpos = jnp.arange(s)
+            mask = qpos[:, None] >= kpos[None, :]
+            scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum(
+            "bhts,bshd->bthd", probs.astype(v.dtype), v,
+            preferred_element_type=jnp.float32,
+        )
+        return out.astype(q.dtype)
+
+    if t <= q_chunk:
+        return one_chunk(q, q_offset)
+    assert t % q_chunk == 0, (t, q_chunk)
+    nchunks = t // q_chunk
+    q_r = q.reshape(b, nchunks, q_chunk, h, hd).swapaxes(0, 1)
+    # checkpoint each chunk: otherwise the bwd saves per-chunk masks/probs,
+    # which at 32k prefill is a multi-GiB stack per layer
+    chunk_fn = jax.checkpoint(
+        one_chunk, policy=jax.checkpoint_policies.nothing_saveable
+    )
+    out = lax.map(lambda i: chunk_fn(q_r[i], q_offset + i * q_chunk), jnp.arange(nchunks))
+    return out.swapaxes(0, 1).reshape(b, t, h, hd)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, hd)
+    k_cache: jax.Array,  # (B, S, KV, hd) — rolling cache, filled up to `length`
+    v_cache: jax.Array,
+    length: jax.Array,  # () int — valid prefix length (incl. current token)
+) -> jax.Array:
+    """Single-token attention against a (possibly seq-sharded) KV cache.
+
+    GQA-grouped: queries reshape to (B, KV, G, hd) and contract against the
+    cache directly — materializing repeat_kv'd K/V would multiply the
+    dominant decode HBM traffic by G (=16 at llama3-405b), which the §Perf
+    hillclimb measured as ~10x on the memory roofline term."""
+    b, _, h, hd = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, hd)  # (B, KV, G, hd); t == 1 folded into G dim
+    scores = jnp.einsum(
+        "bkgh,bskh->bkgs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * (hd**-0.5)
+    mask = jnp.arange(s)[None, None, None, :] < length
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bkgs,bskh->bkgh", probs.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def qkv_project(
+    cfg: ArchConfig, x: jax.Array, p: dict, prefix: str = ""
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    b, t, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.kv_heads, cfg.hd
+    q = jnp.einsum("btd,dk->btk", x, p[f"{prefix}wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dk->btk", x, p[f"{prefix}wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dk->btk", x, p[f"{prefix}wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p[f"{prefix}bq"].astype(x.dtype)
+        k = k + p[f"{prefix}bk"].astype(x.dtype)
+        v = v + p[f"{prefix}bv"].astype(x.dtype)
+    q = q.reshape(b, t, h, hd)
+    k = k.reshape(b, t, kv, hd)
+    v = v.reshape(b, t, kv, hd)
+    q = logical_constraint(q, P("dp", None, "tp", None))
+    return q, k, v
+
+
+def out_project(x_attn: jax.Array, p: dict, prefix: str = "") -> jax.Array:
+    b, t, h, hd = x_attn.shape
+    return jnp.einsum(
+        "btk,kd->btd", x_attn.reshape(b, t, h * hd), p[f"{prefix}wo"].astype(x_attn.dtype)
+    )
+
+
+# ----------------------------------------------------------------------------
+# MLPs
+# ----------------------------------------------------------------------------
+
+
+def mlp(cfg: ArchConfig, x: jax.Array, p: dict, prefix: str = "") -> jax.Array:
+    if cfg.mlp_act == "swiglu":
+        gate = jnp.einsum("btd,df->btf", x, p[f"{prefix}w_gate"].astype(x.dtype))
+        up = jnp.einsum("btd,df->btf", x, p[f"{prefix}w_up"].astype(x.dtype))
+        hidden = jax.nn.silu(gate) * up
+    else:  # gelu
+        hidden = jax.nn.gelu(
+            jnp.einsum("btd,df->btf", x, p[f"{prefix}w_up"].astype(x.dtype))
+            + p[f"{prefix}b_up"].astype(x.dtype)
+        )
+    hidden = logical_constraint(hidden, P("dp", None, "tp"))
+    out = jnp.einsum("btf,fd->btd", hidden, p[f"{prefix}w_down"].astype(x.dtype))
+    if cfg.mlp_act != "swiglu":
+        out = out + p[f"{prefix}b_down"].astype(x.dtype)
+    return out
+
+
+# ----------------------------------------------------------------------------
+# Mixture of Experts — sort/gather "dropless-with-capacity" dispatch
+# ----------------------------------------------------------------------------
+
+
+def moe_ffn(cfg: ArchConfig, x: jax.Array, p: dict, prefix: str = "moe_") -> jax.Array:
+    """Top-k routed experts (+ optional always-on shared experts).
+
+    Dispatch is gather-based (O(N·k·d) data movement instead of the O(N·E·C·d)
+    one-hot einsum): sort token-assignments by expert, rank within expert via
+    a cumulative count, drop beyond static capacity C, gather into (E, C, d),
+    run the per-expert FFN as grouped matmuls, scatter-add back weighted by
+    router gates.  Experts are EP-sharded over "tp" when divisible (deepseek
+    64e, jamba 16e); otherwise the expert FFN dim is TP-sharded (grok 8e).
+
+    The dispatch runs in token CHUNKS (lax.map): arbitrary-index gathers over
+    a dp-sharded token table cannot be partitioned by SPMD (it replicates the
+    table — ~120 GiB/device at 32k prefill), so chunking bounds the
+    replicated working set to one chunk.  A shard_map all-to-all dispatch is
+    the §Perf follow-up (see EXPERIMENTS.md).
+    """
+    b, t, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    n = b * t
+    xf = logical_constraint(x.reshape(n, d), P("dp", None))
+
+    nchunks = 1
+    while n // nchunks > cfg.moe_dispatch_tokens and n % (nchunks * 2) == 0:
+        nchunks *= 2
+    chunk = n // nchunks
+
+    cap = int(cfg.capacity_factor * chunk * k / e + 0.5)
+    cap = max(8, -(-cap // 8) * 8)
+    ep = e % 16 == 0
+    # capacity dim shards over "dp" (free inside the dispatch: no batch dim
+    # survives the flatten) — without it the non-EP (grok) expert buffers
+    # replicate (E, C, d) f32 on every device
+    xe_spec = P("tp", "dp", None) if ep else P(None, "dp", None)
+    hid_spec = P("tp", "dp", None) if ep else P(None, "dp", "tp")
+
+    def route_chunk(xc: jax.Array) -> jax.Array:  # (chunk, d) -> (chunk, d)
+        router_logits = jnp.einsum(
+            "nd,de->ne", xc.astype(jnp.float32),
+            p[f"{prefix}router"].astype(jnp.float32),
+        )
+        gates, experts = lax.top_k(jax.nn.softmax(router_logits, axis=-1), k)
+        gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+
+        flat_exp = experts.reshape(-1)  # (chunk*k,)
+        flat_tok = jnp.repeat(jnp.arange(chunk), k)
+        flat_gate = gates.reshape(-1)
+        order = jnp.argsort(flat_exp)  # stable
+        sorted_exp = flat_exp[order]
+        group_start = jnp.searchsorted(sorted_exp, jnp.arange(e), side="left")
+        rank = jnp.arange(chunk * k) - group_start[sorted_exp]
+        keep = rank < cap
+        slot = jnp.where(keep, sorted_exp * cap + rank, e * cap)
+
+        tok_for_slot = jnp.full((e * cap + 1,), chunk, jnp.int32)
+        gate_for_slot = jnp.zeros((e * cap + 1,), jnp.float32)
+        tok_for_slot = tok_for_slot.at[slot].set(flat_tok[order].astype(jnp.int32))
+        gate_for_slot = gate_for_slot.at[slot].set(flat_gate[order])
+        tok_for_slot = tok_for_slot[: e * cap]
+        gate_for_slot = gate_for_slot[: e * cap]
+
+        # combine-accumulator dtype: bf16 activations accumulate the <=top_k
+        # expert contributions in bf16 so the EP combine all-reduce moves
+        # half the bytes (§Perf); f32 runs (tests) keep exact accumulation
+        if cfg.moe_combine_dtype == "float32" or xc.dtype == jnp.float32:
+            acc_dt = jnp.float32
+        else:
+            acc_dt = xc.dtype
+
+        xc_pad = jnp.concatenate([xc, jnp.zeros((1, d), xc.dtype)], axis=0)
+        xe = logical_constraint(xc_pad[tok_for_slot].reshape(e, cap, d), xe_spec)
+
+        if cfg.mlp_act == "swiglu":
+            g = jnp.einsum("ecd,edf->ecf", xe, p[f"{prefix}w_gate"].astype(xe.dtype))
+            u = jnp.einsum("ecd,edf->ecf", xe, p[f"{prefix}w_up"].astype(xe.dtype))
+            hid = jax.nn.silu(g) * u
+        else:
+            hid = jax.nn.gelu(
+                jnp.einsum("ecd,edf->ecf", xe, p[f"{prefix}w_up"].astype(xe.dtype))
+            )
+        hid = logical_constraint(hid, hid_spec)
+        ye = jnp.einsum("ecf,efd->ecd", hid, p[f"{prefix}w_down"].astype(xe.dtype))
+        # NOTE (§Perf iteration, refuted): scattering from the 3-D (E, C, d)
+        # layout to keep the EP dim sharded INCREASED combine all-reduce
+        # bytes 451 -> 780 GiB/dev at deepseek train — SPMD turns the
+        # ep-sharded scatter into wider reductions.  The flatten is kept; the
+        # structural fix is a shard_map all-to-all dispatch (future work).
+        ye = logical_constraint(ye, xe_spec).reshape(e * cap, d)
+
+        out = jnp.zeros((chunk + 1, d), acc_dt)
+        out = out.at[tok_for_slot].add(
+            ye.astype(acc_dt) * gate_for_slot[:, None].astype(acc_dt)
+        )
+        return out[:chunk].astype(xc.dtype)
+
+    # checkpoint each routing round: the map's backward otherwise saves the
+    # per-chunk f32 (E*C, d) dispatch buffers (a 7.7 GiB replicated stack at
+    # grok train_4k)
+    routed = jax.checkpoint(
+        route_chunk, policy=jax.checkpoint_policies.nothing_saveable
+    )
+    if nchunks == 1:
+        out = routed(xf)
+    else:
+        out = lax.map(routed, xf.reshape(nchunks, chunk, d))
+        out = out.reshape(n, d)
+    out = logical_constraint(out, P("dp", None))
+
+    if cfg.num_shared_experts:
+        shared = mlp(cfg, x, p, prefix=f"{prefix}shared_")
+        out = out + shared.reshape(n, d)
+    return out.reshape(b, t, d)
+
+
+def moe_aux_loss(router_logits: jax.Array, experts: jax.Array, e: int) -> jax.Array:
+    """Switch-style load-balancing loss (logged, weight configured upstream)."""
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    density = jnp.mean(jax.nn.one_hot(experts[..., 0], e), axis=0)
+    density_prob = jnp.mean(probs, axis=0)
+    return e * jnp.sum(density * density_prob)

@@ -1,0 +1,154 @@
+"""Mamba selective-SSM block (Gu & Dao 2023) — used by the Jamba hybrid.
+
+Block: in_proj -> (x, z); causal depthwise conv (width cfg.ssm_conv) + SiLU;
+data-dependent (dt, B, C); selective scan
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t,   y_t = C_t . h_t + D * x_t
+then y * SiLU(z) -> out_proj.
+
+TP: d_inner shards over "tp" — the whole recurrence is elementwise over
+d_inner so the scan needs no collectives; only in/out projections touch the
+"tp"-sharded dim (column-/row-parallel).  Decode state is (B, d_inner,
+d_state) + a (conv-1)-token conv buffer: O(1) in sequence length.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.meshes import logical_constraint
+from repro.models.model_api import ArchConfig, ParamDefs
+
+
+def d_inner(cfg: ArchConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def dt_rank(cfg: ArchConfig) -> int:
+    return max(cfg.d_model // 16, 8)
+
+
+def param_defs(cfg: ArchConfig, lead: tuple[int, ...]) -> ParamDefs:
+    """Mamba params with arbitrary leading stack dims (e.g. (periods, 7))."""
+    d, di, ds, dr, ck = cfg.d_model, d_inner(cfg), cfg.d_state, dt_rank(cfg), cfg.ssm_conv
+    n = (None,) * len(lead)
+    return {
+        "in_proj": (lead + (d, 2 * di), P(*n, "fsdp", "tp")),
+        "conv_w": (lead + (ck, di), P(*n, None, "tp")),
+        "conv_b": (lead + (di,), P(*n, "tp")),
+        "x_proj": (lead + (di, dr + 2 * ds), P(*n, "tp", None)),
+        "dt_w": (lead + (dr, di), P(*n, None, "tp")),
+        "dt_bias": (lead + (di,), P(*n, "tp")),
+        "a_log": (lead + (di, ds), P(*n, "tp", None)),
+        "d_skip": (lead + (di,), P(*n, "tp")),
+        "out_proj": (lead + (di, d), P(*n, "tp", "fsdp")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, buf: jax.Array | None):
+    """Depthwise causal conv over time.  x: (B, T, di), w: (K, di).
+
+    buf: (B, K-1, di) trailing context (decode) or None (train, zero pad).
+    Returns (y, new_buf)."""
+    k = w.shape[0]
+    if buf is None:
+        buf = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xx = jnp.concatenate([buf.astype(x.dtype), x], axis=1)  # (B, T+K-1, di)
+    y = sum(
+        xx[:, i : i + x.shape[1], :] * w[i].astype(x.dtype)[None, None, :]
+        for i in range(k)
+    )
+    y = y + b.astype(x.dtype)
+    new_buf = xx[:, -(k - 1) :, :]
+    return y, new_buf
+
+
+TIME_CHUNK = 64  # gradient-checkpoint granularity over the selective scan
+
+
+def _ssm_scan(x_act: jax.Array, dt: jax.Array, bmat: jax.Array, cmat: jax.Array,
+              a: jax.Array, h0: jax.Array):
+    """Selective scan.  x_act/dt: (B,T,di); bmat/cmat: (B,T,ds); a: (di,ds);
+    h0: (B,di,ds).  Returns y (B,T,di) f32, h_T.
+
+    Time-chunked + per-chunk remat (see rwkv6._wkv_scan): bounds the saved
+    (B,di,ds) states to chunk boundaries instead of every timestep."""
+
+    def step(h, xs):
+        x_t, dt_t, b_t, c_t = xs  # (B,di),(B,di),(B,ds),(B,ds)
+        da = jnp.exp(dt_t[..., None] * a[None])  # (B,di,ds)
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y_t = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y_t
+
+    t = x_act.shape[1]
+    xs = tuple(z.swapaxes(0, 1) for z in (x_act, dt, bmat, cmat))
+    if t <= TIME_CHUNK or t % TIME_CHUNK != 0:
+        h_t, ys = lax.scan(step, h0, xs)
+        return ys.swapaxes(0, 1), h_t
+
+    nchunks = t // TIME_CHUNK
+    chunked = tuple(z.reshape((nchunks, TIME_CHUNK) + z.shape[1:]) for z in xs)
+
+    @jax.checkpoint
+    def chunk_fn(h, cxs):
+        return lax.scan(step, h, cxs)
+
+    h_t, ys = lax.scan(chunk_fn, h0, chunked)
+    ys = ys.reshape((t,) + ys.shape[2:])
+    return ys.swapaxes(0, 1), h_t
+
+
+def mamba_forward(
+    cfg: ArchConfig,
+    x: jax.Array,  # (B, T, d)
+    p: dict,  # mamba params (leading dims already indexed away)
+    state: tuple[jax.Array, jax.Array] | None = None,  # (h, conv_buf) decode
+):
+    """Returns (out (B,T,d), (h_T, conv_buf_T))."""
+    b, t, _ = x.shape
+    di, ds, dr = d_inner(cfg), cfg.d_state, dt_rank(cfg)
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj"].astype(x.dtype))
+    xz = logical_constraint(xz, P("dp", None, "tp"))
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    h0 = state[0] if state is not None else jnp.zeros((b, di, ds), jnp.float32)
+    buf = state[1] if state is not None else None
+    x_conv, new_buf = _causal_conv(x_in, p["conv_w"], p["conv_b"], buf)
+    x_act = jax.nn.silu(x_conv)
+    proj = jnp.einsum("bte,ef->btf", x_act, p["x_proj"].astype(x.dtype))
+    dt_low, bmat, cmat = jnp.split(proj, [dr, dr + ds], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,re->bte", dt_low, p["dt_w"].astype(x.dtype)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, h_t = _ssm_scan(
+        x_act.astype(jnp.float32), dt, bmat.astype(jnp.float32),
+        cmat.astype(jnp.float32), a, h0,
+    )
+    y = y + p["d_skip"].astype(jnp.float32) * x_act.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(x.dtype))
+    return out, (h_t, new_buf)
+
+
+def init_state(cfg: ArchConfig, batch: int, lead: tuple[int, ...] = (), abstract=False):
+    di, ds, ck = d_inner(cfg), cfg.d_state, cfg.ssm_conv
+    h_shape = lead + (batch, di, ds)
+    b_shape = lead + (batch, ck - 1, di)
+    if abstract:
+        return (
+            jax.ShapeDtypeStruct(h_shape, jnp.float32),
+            jax.ShapeDtypeStruct(b_shape, cfg.activation_dtype()),
+        )
+    return (
+        jnp.zeros(h_shape, jnp.float32),
+        jnp.zeros(b_shape, cfg.activation_dtype()),
+    )
+
+
+def state_specs(lead_n: int):
+    n = (None,) * lead_n
+    return (P(*n, "dp", "tp", None), P(*n, "dp", None, "tp"))

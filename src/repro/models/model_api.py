@@ -1,0 +1,253 @@
+"""Model API: architecture config, shape config, and the family registry.
+
+Every assigned architecture is a single ``ArchConfig`` (exact published
+numbers live in ``repro/configs/<id>.py``) handled by one of five family
+implementations (dense/moe/vlm share ``transformer.py``):
+
+  dense | moe | vlm  -> transformer.py   (decoder-only, GQA, optional MoE FFN,
+                                          optional provided prefix embeddings)
+  rwkv               -> rwkv6.py         (attention-free, Finch)
+  hybrid             -> hybrid.py        (Jamba: mamba/attention interleave + MoE)
+  encdec             -> encdec.py        (Whisper: encoder + cross-attn decoder)
+
+Each family module exposes a ``ModelImpl`` of pure functions — params are
+plain nested dicts of arrays; sharding comes from a parallel dict of
+PartitionSpecs built from the same ``param_defs`` table that defines shapes
+(single source of truth, so specs can never drift from shapes).
+
+Logical sharding axes used in specs (mapped to mesh axes at launch):
+  "tp"    -> "model"            tensor-parallel dim (heads / ffn / vocab / experts)
+  "fsdp"  -> "data"             fully-sharded param dim
+  "dp"    -> ("pod","data")     batch dim of activations ("data" on single pod)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# ----------------------------------------------------------------------------
+# configs
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | vlm | rwkv | hybrid | encdec
+    num_layers: int
+    d_model: int
+    num_heads: int
+    d_ff: int
+    vocab_size: int
+    num_kv_heads: int = 0  # 0 -> num_heads
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    # MoE
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    top_k: int = 0
+    moe_every: int = 1  # MoE FFN on layers where (layer % moe_every == moe_every-1)
+    capacity_factor: float = 1.25
+    # attention flavor
+    qkv_bias: bool = False
+    rope_fraction: float = 1.0  # chatglm3 "2d" RoPE == rotary on half the head dim
+    rope_theta: float = 10000.0
+    mlp_act: str = "swiglu"  # swiglu | gelu
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    # ssm / hybrid
+    attn_period: int = 0  # hybrid: one attention layer per `attn_period` layers
+    d_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    # enc-dec / modality stubs
+    encoder_layers: int = 0
+    num_prefix_tokens: int = 0  # VLM patches / audio frames fed as embeddings
+    tie_embeddings: bool = True
+    # numerics & training knobs (per-arch so huge archs fit HBM)
+    dtype: str = "bfloat16"  # activation/compute dtype
+    param_dtype: str = "float32"
+    optimizer: str = "adamw"  # adamw | adafactor | sgdm
+    remat: str = "full"  # full | dots | none
+    microbatches_train: int = 1
+    residual_shard: str = "none"  # "none" | "seq": Megatron-SP-style seq-sharded
+    #   residual stream between blocks (bounds the per-layer saved activations)
+    grad_accum_dtype: str = "float32"  # microbatch gradient accumulator dtype
+    fsdp_over_pod: bool = False  # multi-pod: shard params over ("pod","data")
+    #   (32-way FSDP) instead of pure cross-pod DP — required for the >=300B
+    #   archs to fit 16 GB/chip; costs cross-pod weight all-gathers
+    scan_unroll: bool = False  # unroll layer scans (dry-run cost probes only:
+    #   XLA cost_analysis counts while-loop bodies once, unrolling fixes that)
+    attn_q_chunk: int = 512  # query-chunk size for exact tiled attention
+    moe_dispatch_tokens: int = 32_768  # tokens per MoE routing round
+    moe_combine_dtype: str = "auto"  # "auto" (= activation dtype) | "float32":
+    #   accumulator for the top-k expert combine; bf16 halves the EP combine
+    #   all-reduce bytes (§Perf)
+    sub_quadratic: bool = False  # can run long_500k
+    source: str = ""  # provenance note ([arXiv/hf; tier])
+
+    # -- derived -------------------------------------------------------------
+    @property
+    def kv_heads(self) -> int:
+        return self.num_kv_heads or self.num_heads
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def padded_vocab(self, tp: int = 16, lane: int = 128) -> int:
+        """Pad vocab so it shards over tp and tiles the 128-lane registers."""
+        mult = _lcm(tp, lane)
+        return -(-self.vocab_size // mult) * mult
+
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def parameter_dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def n_params(self) -> int:
+        """Total parameter count (from the registered param defs)."""
+        import math
+
+        defs = get_model(self).param_defs(self)
+        return sum(math.prod(shape) for shape, _ in defs.values())
+
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE: only routed top_k + shared)."""
+        import math
+
+        defs = get_model(self).param_defs(self)
+        total = 0
+        for name, (shape, _) in defs.items():
+            count = math.prod(shape)
+            if _is_routed_expert(name) and self.num_experts > self.top_k > 0:
+                count = count * self.top_k // self.num_experts
+            total += count
+        return total
+
+
+def _lcm(a: int, b: int) -> int:
+    import math
+
+    return a * b // math.gcd(a, b)
+
+
+def _is_routed_expert(name: str) -> bool:
+    return "moe_" in name and "router" not in name and "shared" not in name
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str  # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+TRAIN_4K = ShapeConfig("train_4k", "train", 4_096, 256)
+PREFILL_32K = ShapeConfig("prefill_32k", "prefill", 32_768, 32)
+DECODE_32K = ShapeConfig("decode_32k", "decode", 32_768, 128)
+LONG_500K = ShapeConfig("long_500k", "decode", 524_288, 1)
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
+
+
+def shape_applicable(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """long_500k requires sub-quadratic sequence mixing (DESIGN.md §5)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: O(L^2) attention infeasible at 524k"
+    return True, ""
+
+
+# ----------------------------------------------------------------------------
+# family implementation protocol
+# ----------------------------------------------------------------------------
+
+# param_defs: cfg -> {path: ((shape...), PartitionSpec)}  — single source of truth
+ParamDefs = dict[str, tuple[tuple[int, ...], P]]
+
+
+class ModelImpl(NamedTuple):
+    param_defs: Callable[[ArchConfig], ParamDefs]
+    loss_fn: Callable[..., Any]  # (params, batch, cfg) -> (loss, metrics)
+    prefill: Callable[..., Any]  # (params, batch, cfg) -> (logits, cache)
+    decode_step: Callable[..., Any]  # (params, cache, batch, cfg) -> (logits, cache)
+    init_cache: Callable[..., Any]  # (cfg, batch, seq) -> cache ShapeDtypeStructs/arrays
+    cache_specs: Callable[..., Any]  # (cfg, batch, seq) -> pytree of PartitionSpec
+    input_specs: Callable[..., Any]  # (cfg, shape) -> dict[str, ShapeDtypeStruct]
+
+
+_REGISTRY: dict[str, ModelImpl] = {}
+
+
+def register_family(name: str, impl: ModelImpl) -> None:
+    _REGISTRY[name] = impl
+
+
+def get_model(cfg: ArchConfig) -> ModelImpl:
+    # dense / moe / vlm all route to the decoder-only transformer
+    family = {"dense": "transformer", "moe": "transformer", "vlm": "transformer"}.get(
+        cfg.family, cfg.family
+    )
+    if family not in _REGISTRY:
+        # populate registry lazily to avoid import cycles
+        import importlib
+
+        for mod in ("transformer", "rwkv6", "hybrid", "encdec"):
+            try:
+                importlib.import_module(f"repro.models.{mod}")
+            except ImportError:
+                pass
+    return _REGISTRY[family]
+
+
+# ----------------------------------------------------------------------------
+# param materialization from defs
+# ----------------------------------------------------------------------------
+
+
+def unflatten(flat: dict[str, Any]) -> dict:
+    """'a.b.c' keyed dict -> nested dicts."""
+    out: dict = {}
+    for path, v in flat.items():
+        node = out
+        parts = path.split(".")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return out
+
+
+def init_params(key: jax.Array, cfg: ArchConfig, scale: float = 0.02):
+    """Materialize parameters from param_defs (truncated-normal-ish init)."""
+    defs = get_model(cfg).param_defs(cfg)
+    dtype = cfg.parameter_dtype()
+    flat = {}
+    keys = jax.random.split(key, len(defs))
+    for k, (path, (shape, _spec)) in zip(keys, sorted(defs.items())):
+        if path.endswith(("scale",)):
+            flat[path] = jnp.ones(shape, dtype)
+        elif path.endswith(("bias", "a_log_bias")) or ".b_" in path:
+            flat[path] = jnp.zeros(shape, dtype)
+        else:
+            flat[path] = (scale * jax.random.normal(k, shape, jnp.float32)).astype(dtype)
+    return unflatten(flat)
+
+
+def abstract_params(cfg: ArchConfig):
+    """ShapeDtypeStruct pytree (dry-run: no allocation)."""
+    defs = get_model(cfg).param_defs(cfg)
+    dtype = cfg.parameter_dtype()
+    return unflatten(
+        {path: jax.ShapeDtypeStruct(shape, dtype) for path, (shape, _) in defs.items()}
+    )
+
+
+def param_pspecs(cfg: ArchConfig):
+    """PartitionSpec pytree matching the param tree, in logical axis names."""
+    defs = get_model(cfg).param_defs(cfg)
+    return unflatten({path: spec for path, (shape, spec) in defs.items()})

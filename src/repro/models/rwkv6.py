@@ -1,0 +1,354 @@
+"""RWKV6 "Finch" (arXiv:2404.05892) — attention-free LM with data-dependent
+per-channel decay.  Family "rwkv".
+
+Per layer: time-mix (the attention replacement) + channel-mix (the FFN
+replacement).  Head dim 64; recurrent state per head is a (64, 64) matrix,
+so the decode "cache" is O(1) in sequence length — which is why this arch
+runs the long_500k cell (DESIGN.md §5).
+
+Time-mix (heads H, head dim e):
+    ddlerp token-shift mixing for r,k,v,w,g (base mu + low-rank data term)
+    w_t = exp(-exp(decay(x)))            # data-dependent decay in (0,1)
+    y_t = r_t . (S_{t-1} + diag(u) k_t^T v_t)
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    out = W_o (GroupNorm_head(y) * silu(g))
+
+Train/prefill uses a lax.scan over time (baseline); the chunked
+matmul-parallel form is the §Perf hillclimb lever for this family.
+
+TP: the d axis is laid out as H*e with H % 16 == 0, so r/k/v/g projections
+are column-parallel, W_o row-parallel, and the recurrent state shards its
+head axis over "tp".
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.meshes import logical_constraint
+from repro.models import layers as L
+from repro.models.model_api import (
+    ArchConfig,
+    ModelImpl,
+    ParamDefs,
+    ShapeConfig,
+    register_family,
+)
+
+HEAD_DIM = 64
+MIX_RANK = 32
+DECAY_RANK = 64
+
+
+def _heads(cfg: ArchConfig) -> int:
+    return cfg.d_model // HEAD_DIM
+
+
+def param_defs(cfg: ArchConfig) -> ParamDefs:
+    d, ff, nl = cfg.d_model, cfg.d_ff, cfg.num_layers
+    vp = cfg.padded_vocab()
+    defs: ParamDefs = {
+        "embed": ((vp, d), P(None, "fsdp")),
+        "lm_head": ((vp, d), P("tp", None)),
+        "final_norm_scale": ((d,), P(None)),
+    }
+    lyr: ParamDefs = {
+        "ln1_scale": ((nl, d), P(None, None)),
+        "ln2_scale": ((nl, d), P(None, None)),
+        # --- time mix -------------------------------------------------------
+        "tm_maa_x": ((nl, d), P(None, None)),
+        "tm_maa": ((nl, 5, d), P(None, None, None)),  # r,k,v,w,g bases
+        "tm_mix_w1": ((nl, d, 5 * MIX_RANK), P(None, "fsdp", None)),
+        "tm_mix_w2": ((nl, 5, MIX_RANK, d), P(None, None, None, None)),
+        "tm_decay_base": ((nl, d), P(None, "tp")),
+        "tm_decay_w1": ((nl, d, DECAY_RANK), P(None, "fsdp", None)),
+        "tm_decay_w2": ((nl, DECAY_RANK, d), P(None, None, "tp")),
+        "tm_u": ((nl, d), P(None, "tp")),  # per-channel bonus
+        "tm_wr": ((nl, d, d), P(None, "fsdp", "tp")),
+        "tm_wk": ((nl, d, d), P(None, "fsdp", "tp")),
+        "tm_wv": ((nl, d, d), P(None, "fsdp", "tp")),
+        "tm_wg": ((nl, d, d), P(None, "fsdp", "tp")),
+        "tm_wo": ((nl, d, d), P(None, "tp", "fsdp")),
+        "tm_gn_scale": ((nl, d), P(None, "tp")),
+        "tm_gn_bias": ((nl, d), P(None, "tp")),
+        # --- channel mix ----------------------------------------------------
+        "cm_mix_k": ((nl, d), P(None, None)),
+        "cm_mix_r": ((nl, d), P(None, None)),
+        "cm_wk": ((nl, d, ff), P(None, "fsdp", "tp")),
+        "cm_wv": ((nl, ff, d), P(None, "tp", "fsdp")),
+        "cm_wr": ((nl, d, d), P(None, "fsdp", "tp")),
+    }
+    for k, v in lyr.items():
+        defs[f"layers.{k}"] = v
+    return defs
+
+
+# ----------------------------------------------------------------------------
+# time mix
+# ----------------------------------------------------------------------------
+
+
+def _ddlerp(x, xprev, lp):
+    """Data-dependent token-shift mixing -> (xr, xk, xv, xw, xg)."""
+    xx = xprev - x
+    xxx = x + xx * lp["tm_maa_x"].astype(x.dtype)
+    b, t, d = x.shape
+    lora = jnp.tanh(
+        jnp.einsum("btd,dr->btr", xxx, lp["tm_mix_w1"].astype(x.dtype))
+    ).reshape(b, t, 5, MIX_RANK)
+    deltas = jnp.einsum("btfr,frd->btfd", lora, lp["tm_mix_w2"].astype(x.dtype))
+    mix = lp["tm_maa"].astype(x.dtype)[None, None] + deltas  # (B,T,5,d)
+    outs = [x + xx * mix[:, :, i] for i in range(5)]
+    return outs
+
+
+def _decay(xw, lp):
+    """w_t in (0,1): exp(-exp(base + low-rank(x)))."""
+    low = jnp.einsum(
+        "btr,rd->btd",
+        jnp.tanh(jnp.einsum("btd,dr->btr", xw, lp["tm_decay_w1"].astype(xw.dtype))),
+        lp["tm_decay_w2"].astype(xw.dtype),
+    )
+    logw = lp["tm_decay_base"].astype(jnp.float32) + low.astype(jnp.float32)
+    return jnp.exp(-jnp.exp(jnp.clip(logw, -8.0, 4.0)))  # f32 (B,T,d)
+
+
+def _group_norm(y, scale, bias, h):
+    """Per-head layer norm of (B, T, H, e) flattened to d."""
+    b, t, _, e = y.shape
+    y32 = y.astype(jnp.float32)
+    mu = jnp.mean(y32, axis=-1, keepdims=True)
+    var = jnp.var(y32, axis=-1, keepdims=True)
+    yn = (y32 - mu) * lax.rsqrt(var + 1e-5)
+    yn = yn.reshape(b, t, h * e)
+    return yn * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+
+
+TIME_CHUNK = 64  # gradient-checkpoint granularity over the time scan
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """The RWKV6 recurrence.  r,k,v: (B,T,H,e); w: (B,T,H,e) decay in (0,1);
+    u: (H,e); s0: (B,H,e,e).  Returns y (B,T,H,e), s_T.
+
+    Time-chunked with per-chunk rematerialization: a plain scan's backward
+    saves the (B,H,e,e) state at EVERY step (34 GB/device at train_4k);
+    checkpointing every TIME_CHUNK steps bounds the saved states to chunk
+    boundaries and recomputes inside — the classic sqrt(T) memory trade."""
+
+    def step(s, rkvw):
+        r_t, k_t, v_t, w_t = rkvw  # (B,H,e)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,e,e)
+        y_t = jnp.einsum("bhi,bhij->bhj", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y_t
+
+    t = r.shape[1]
+    rkvw = tuple(x.swapaxes(0, 1) for x in (r, k, v, w))  # (T,B,H,e)
+    if t <= TIME_CHUNK or t % TIME_CHUNK != 0:
+        s_t, ys = lax.scan(step, s0, rkvw)
+        return ys.swapaxes(0, 1), s_t
+
+    nchunks = t // TIME_CHUNK
+    chunked = tuple(
+        x.reshape((nchunks, TIME_CHUNK) + x.shape[1:]) for x in rkvw
+    )
+
+    @jax.checkpoint
+    def chunk_fn(s, xs):
+        return lax.scan(step, s, xs)
+
+    s_t, ys = lax.scan(chunk_fn, s0, chunked)  # ys: (nc, tc, B, H, e)
+    ys = ys.reshape((t,) + ys.shape[2:])
+    return ys.swapaxes(0, 1), s_t  # (B,T,H,e)
+
+
+def _time_mix(cfg, x, xprev, lp, s0):
+    b, t, d = x.shape
+    h = _heads(cfg)
+    xr, xk, xv, xw, xg = _ddlerp(x, xprev, lp)
+    r = jnp.einsum("btd,de->bte", xr, lp["tm_wr"].astype(x.dtype)).reshape(b, t, h, HEAD_DIM)
+    k = jnp.einsum("btd,de->bte", xk, lp["tm_wk"].astype(x.dtype)).reshape(b, t, h, HEAD_DIM)
+    v = jnp.einsum("btd,de->bte", xv, lp["tm_wv"].astype(x.dtype)).reshape(b, t, h, HEAD_DIM)
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, lp["tm_wg"].astype(x.dtype)))
+    w = _decay(xw, lp).reshape(b, t, h, HEAD_DIM)
+    u = lp["tm_u"].astype(jnp.float32).reshape(h, HEAD_DIM)
+    r = logical_constraint(r, P("dp", None, "tp", None))
+    y, s_t = _wkv_scan(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), w, u, s0
+    )
+    y = _group_norm(y, lp["tm_gn_scale"], lp["tm_gn_bias"], h).astype(x.dtype)
+    out = jnp.einsum("bte,ed->btd", (y * g.reshape(b, t, d)), lp["tm_wo"].astype(x.dtype))
+    return out, s_t
+
+
+def _channel_mix(x, xprev, lp):
+    xx = xprev - x
+    xk = x + xx * lp["cm_mix_k"].astype(x.dtype)
+    xr = x + xx * lp["cm_mix_r"].astype(x.dtype)
+    kk = jnp.einsum("btd,df->btf", xk, lp["cm_wk"].astype(x.dtype))
+    kk = jnp.square(jax.nn.relu(kk))
+    kk = logical_constraint(kk, P("dp", None, "tp"))
+    vv = jnp.einsum("btf,fd->btd", kk, lp["cm_wv"].astype(x.dtype))
+    rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, lp["cm_wr"].astype(x.dtype)))
+    return rr * vv
+
+
+def _shift(x: jax.Array, x0: jax.Array | None = None) -> jax.Array:
+    """Token shift: x_{t-1}, with x0 (B, d) carried in from the cache."""
+    first = jnp.zeros_like(x[:, :1]) if x0 is None else x0[:, None].astype(x.dtype)
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _block(cfg, x, lp, s0, tm_x0=None, cm_x0=None):
+    h = L.rms_norm(x, lp["ln1_scale"])
+    tm_out, s_t = _time_mix(cfg, h, _shift(h, tm_x0), lp, s0)
+    x = x + tm_out
+    h2 = L.rms_norm(x, lp["ln2_scale"])
+    x = x + _channel_mix(h2, _shift(h2, cm_x0), lp)
+    x = logical_constraint(x, P("dp", None, None))
+    # carry out the last normalized token for decode token-shift
+    return x, s_t, h[:, -1], h2[:, -1]
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = (
+        jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        if cfg.remat == "dots"
+        else jax.checkpoint_policies.nothing_saveable
+    )
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _embed(cfg, params, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.activation_dtype())
+    return logical_constraint(x, P("dp", None, None))
+
+
+def _logits(cfg, params, x):
+    x = L.rms_norm(x, params["final_norm_scale"])
+    logits = jnp.einsum("btd,vd->btv", x, params["lm_head"].astype(x.dtype))
+    return logical_constraint(logits, P("dp", None, "tp"))
+
+
+def _trunk(cfg, params, x, collect_states: bool):
+    b = x.shape[0]
+    h = _heads(cfg)
+    s0 = jnp.zeros((b, h, HEAD_DIM, HEAD_DIM), jnp.float32)
+    block = _remat(cfg, functools.partial(_block, cfg))
+
+    def body(carry, lp):
+        x = carry
+        x, s_t, tm_last, cm_last = block(x, lp, s0)
+        ys = (s_t, tm_last, cm_last) if collect_states else None
+        return x, ys
+
+    x, ys = lax.scan(
+        body, x, params["layers"], unroll=cfg.num_layers if cfg.scan_unroll else 1
+    )
+    return x, ys
+
+
+def loss_fn(params, batch, cfg):
+    x = _embed(cfg, params, batch["tokens"])
+    x, _ = _trunk(cfg, params, x, collect_states=False)
+    logits = _logits(cfg, params, x).astype(jnp.float32)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    loss = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"loss": loss}
+
+
+def prefill(params, batch, cfg):
+    x = _embed(cfg, params, batch["tokens"])
+    x, (s, tm_x, cm_x) = _trunk(cfg, params, x, collect_states=True)
+    logits = _logits(cfg, params, x[:, -1:])
+    cache = {
+        "s": s,  # (L, B, H, e, e)
+        "tm_x": tm_x,  # (L, B, d)
+        "cm_x": cm_x,
+        "pos": jnp.array(x.shape[1], jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(params, cache, batch, cfg):
+    x = _embed(cfg, params, batch["tokens"])  # (B, 1, d)
+
+    def body(carry, lp_state):
+        lp, s0, tm_x0, cm_x0 = lp_state
+        x = carry
+        x, s_t, tm_last, cm_last = _block(cfg, x, lp, s0, tm_x0, cm_x0)
+        return x, (s_t, tm_last, cm_last)
+
+    x, (s, tm_x, cm_x) = lax.scan(
+        body, x, (params["layers"], cache["s"], cache["tm_x"], cache["cm_x"]),
+        unroll=cfg.num_layers if cfg.scan_unroll else 1,
+    )
+    logits = _logits(cfg, params, x)
+    return logits, {"s": s, "tm_x": tm_x, "cm_x": cm_x, "pos": cache["pos"] + 1}
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq: int, abstract: bool = False):
+    """RWKV's 'KV cache of seq_len' is its O(1) recurrent state (DESIGN.md §5);
+    seq only sets the starting position counter."""
+    h = _heads(cfg)
+    shapes = {
+        "s": ((cfg.num_layers, batch, h, HEAD_DIM, HEAD_DIM), jnp.float32),
+        "tm_x": ((cfg.num_layers, batch, cfg.d_model), cfg.activation_dtype()),
+        "cm_x": ((cfg.num_layers, batch, cfg.d_model), cfg.activation_dtype()),
+    }
+    if abstract:
+        out: dict[str, Any] = {
+            k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()
+        }
+        out["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    else:
+        out = {k: jnp.zeros(s, d) for k, (s, d) in shapes.items()}
+        out["pos"] = jnp.array(seq - 1, jnp.int32)
+    return out
+
+
+def cache_specs(cfg: ArchConfig, batch: int, seq: int):
+    return {
+        "s": P(None, "dp", "tp", None, None),
+        "tm_x": P(None, "dp", None),
+        "cm_x": P(None, "dp", None),
+        "pos": P(),
+    }
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict[str, Any]:
+    gb, t = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {
+            "tokens": jax.ShapeDtypeStruct((gb, t), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((gb, t), jnp.int32),
+        }
+    if shape.kind == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((gb, t), jnp.int32)}
+    return {"tokens": jax.ShapeDtypeStruct((gb, 1), jnp.int32)}
+
+
+register_family(
+    "rwkv",
+    ModelImpl(
+        param_defs=param_defs,
+        loss_fn=loss_fn,
+        prefill=prefill,
+        decode_step=decode_step,
+        init_cache=init_cache,
+        cache_specs=cache_specs,
+        input_specs=input_specs,
+    ),
+)

@@ -1,0 +1,391 @@
+"""Decoder-only transformer LM — families "dense", "moe", "vlm".
+
+Covers qwen2-1.5b, chatglm3-6b, command-r-plus-104b, llama3-405b (dense),
+grok-1-314b, deepseek-moe-16b (MoE FFN), llava-next-mistral-7b (VLM: provided
+patch embeddings prepended to the token sequence).
+
+Structure: embedding -> lax.scan over L identical blocks (params stacked on a
+leading L axis; per-block remat policy from cfg.remat) -> final norm -> tied
+(or separate) LM head.
+
+TP notes (see DESIGN.md §4): attention heads shard over "tp" only when
+num_heads % 16 == 0 (qwen2's 12 heads and whisper's 8 stay replicated);
+KV projections/caches keep heads replicated (GQA kv < 16) — decode caches
+shard their *sequence* dim over "tp" instead, which XLA turns into
+flash-decode-style partial attention + small psums.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.meshes import logical_constraint
+from repro.models import layers as L
+from repro.models.model_api import (
+    ArchConfig,
+    ModelImpl,
+    ParamDefs,
+    ShapeConfig,
+    register_family,
+)
+
+TP = 16  # production tensor-parallel width (divisibility decisions)
+
+
+def _attn_tp(cfg: ArchConfig) -> bool:
+    return cfg.num_heads % TP == 0
+
+
+def _expert_ep(cfg: ArchConfig) -> bool:
+    return cfg.num_experts % TP == 0
+
+
+def _moe_layer(cfg: ArchConfig, layer: int) -> bool:
+    return cfg.num_experts > 0 and (layer % cfg.moe_every == cfg.moe_every - 1)
+
+
+# ----------------------------------------------------------------------------
+# parameter table — single source of truth for shapes AND shardings
+# ----------------------------------------------------------------------------
+
+
+def param_defs(cfg: ArchConfig) -> ParamDefs:
+    d, h, kv, hd, ff = cfg.d_model, cfg.num_heads, cfg.kv_heads, cfg.hd, cfg.d_ff
+    nl, vp = cfg.num_layers, cfg.padded_vocab(TP)
+    atp = "tp" if _attn_tp(cfg) else None
+    # Embedding sharding (DESIGN.md §4): token-gather from a vocab-sharded
+    # table forces SPMD to replicate it, so for untied storage the input
+    # table shards its d dim ("fsdp") and the LM head shards vocab ("tp") —
+    # both the gather and the logits matmul then partition cleanly.  Tied
+    # tables (small archs only) keep P("tp","fsdp") and accept the gather.
+    embed_spec = P("tp", "fsdp") if cfg.tie_embeddings else P(None, "fsdp")
+    defs: ParamDefs = {
+        "embed": ((vp, d), embed_spec),
+        "final_norm_scale": ((d,), P(None)),
+    }
+    if cfg.norm == "layernorm":
+        defs["final_norm_bias"] = ((d,), P(None))
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ((vp, d), P("tp", None))
+
+    lyr: ParamDefs = {
+        "ln1_scale": ((nl, d), P(None, None)),
+        "wq": ((nl, d, h * hd), P(None, "fsdp", atp)),
+        "wk": ((nl, d, kv * hd), P(None, "fsdp", None)),
+        "wv": ((nl, d, kv * hd), P(None, "fsdp", None)),
+        "wo": ((nl, h * hd, d), P(None, atp, "fsdp")),
+        "ln2_scale": ((nl, d), P(None, None)),
+    }
+    if cfg.norm == "layernorm":
+        lyr["ln1_bias"] = ((nl, d), P(None, None))
+        lyr["ln2_bias"] = ((nl, d), P(None, None))
+    if cfg.qkv_bias:
+        lyr["bq"] = ((nl, h * hd), P(None, atp))
+        lyr["bk"] = ((nl, kv * hd), P(None, None))
+        lyr["bv"] = ((nl, kv * hd), P(None, None))
+
+    if cfg.num_experts and cfg.moe_every == 1:
+        lyr.update(_moe_defs(cfg, nl))
+    elif cfg.num_experts:
+        # mixed dense/MoE stacks are handled by the hybrid module
+        raise ValueError("transformer family expects moe_every == 1")
+    else:
+        lyr.update(_mlp_defs(cfg, nl, ff))
+
+    for k, v in lyr.items():
+        defs[f"layers.{k}"] = v
+    return defs
+
+
+def _mlp_defs(cfg: ArchConfig, nl: int, ff: int, prefix: str = "") -> ParamDefs:
+    d = cfg.d_model
+    out: ParamDefs = {}
+    if cfg.mlp_act == "swiglu":
+        out[f"{prefix}w_gate"] = ((nl, d, ff), P(None, "fsdp", "tp"))
+        out[f"{prefix}w_up"] = ((nl, d, ff), P(None, "fsdp", "tp"))
+        out[f"{prefix}w_down"] = ((nl, ff, d), P(None, "tp", "fsdp"))
+    else:
+        out[f"{prefix}w_up"] = ((nl, d, ff), P(None, "fsdp", "tp"))
+        out[f"{prefix}b_up"] = ((nl, ff), P(None, "tp"))
+        out[f"{prefix}w_down"] = ((nl, ff, d), P(None, "tp", "fsdp"))
+        out[f"{prefix}b_down"] = ((nl, d), P(None, None))
+    return out
+
+
+def _moe_defs(cfg: ArchConfig, nl: int) -> ParamDefs:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ep = _expert_ep(cfg)
+    # EP: experts over "tp"; otherwise TP the expert ffn dim (grok 8e)
+    cspec = P(None, "tp", "fsdp", None) if ep else P(None, None, "fsdp", "tp")
+    rspec = P(None, "tp", None, "fsdp") if ep else P(None, None, "tp", "fsdp")
+    out: ParamDefs = {
+        "moe_router": ((nl, d, e), P(None, "fsdp", None)),
+        "moe_w_gate": ((nl, e, d, ff), cspec),
+        "moe_w_up": ((nl, e, d, ff), cspec),
+        "moe_w_down": ((nl, e, ff, d), rspec),
+    }
+    if cfg.num_shared_experts:
+        sh_ff = cfg.num_shared_experts * ff
+        out["moe_shared_w_gate"] = ((nl, d, sh_ff), P(None, "fsdp", "tp"))
+        out["moe_shared_w_up"] = ((nl, d, sh_ff), P(None, "fsdp", "tp"))
+        out["moe_shared_w_down"] = ((nl, sh_ff, d), P(None, "tp", "fsdp"))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# blocks
+# ----------------------------------------------------------------------------
+
+
+
+def _res_spec(cfg: ArchConfig) -> P:
+    """Residual-stream sharding between blocks (Megatron-SP when "seq")."""
+    return P("dp", "tp", None) if cfg.residual_shard == "seq" else P("dp", None, None)
+
+def _block_train(cfg: ArchConfig, x: jax.Array, lp: dict, positions: jax.Array) -> jax.Array:
+    """One transformer block over a full sequence (train/prefill)."""
+    h = L.apply_norm(cfg, x, lp, "ln1")
+    q, k, v = L.qkv_project(cfg, h, lp)
+    q = L.apply_rope(q, positions, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+    k = L.apply_rope(k, positions, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+    attn = L.attention(q, k, v, causal=True, q_chunk=cfg.attn_q_chunk)
+    x = x + L.out_project(attn, lp)
+    h = L.apply_norm(cfg, x, lp, "ln2")
+    if cfg.num_experts:
+        x = x + L.moe_ffn(cfg, h, lp)
+    else:
+        x = x + L.mlp(cfg, h, lp)
+    return logical_constraint(x, _res_spec(cfg))
+
+
+def _block_prefill(cfg: ArchConfig, x, lp, positions):
+    """Block that also returns the (k, v) cache entries."""
+    h = L.apply_norm(cfg, x, lp, "ln1")
+    q, k, v = L.qkv_project(cfg, h, lp)
+    q = L.apply_rope(q, positions, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+    k = L.apply_rope(k, positions, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+    attn = L.attention(q, k, v, causal=True, q_chunk=cfg.attn_q_chunk)
+    x = x + L.out_project(attn, lp)
+    h = L.apply_norm(cfg, x, lp, "ln2")
+    x = x + (L.moe_ffn(cfg, h, lp) if cfg.num_experts else L.mlp(cfg, h, lp))
+    return logical_constraint(x, _res_spec(cfg)), k, v
+
+
+def _block_decode(cfg: ArchConfig, x, lp, k_cache, v_cache, pos):
+    """Single-token block against a KV cache; returns updated cache entries."""
+    h = L.apply_norm(cfg, x, lp, "ln1")
+    q, k, v = L.qkv_project(cfg, h, lp)
+    posb = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q = L.apply_rope(q, posb, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+    k = L.apply_rope(k, posb, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+    k_cache = lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), pos, axis=1)
+    v_cache = lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), pos, axis=1)
+    attn = L.decode_attention(q, k_cache, v_cache, pos + 1)
+    x = x + L.out_project(attn, lp)
+    h = L.apply_norm(cfg, x, lp, "ln2")
+    x = x + (L.moe_ffn(cfg, h, lp) if cfg.num_experts else L.mlp(cfg, h, lp))
+    return x, k_cache, v_cache
+
+
+def _remat(cfg: ArchConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ----------------------------------------------------------------------------
+# forward passes
+# ----------------------------------------------------------------------------
+
+
+def _embed_tokens(
+    cfg: ArchConfig, params: dict, tokens: jax.Array, decode: bool = False
+) -> jax.Array:
+    emb = jnp.take(params["embed"], tokens, axis=0).astype(cfg.activation_dtype())
+    spec = P("dp", None, None) if decode else _res_spec(cfg)
+    return logical_constraint(emb, spec)
+
+
+def _assemble_sequence(cfg, params, batch) -> jax.Array:
+    """Token embeddings, with VLM/audio prefix embeddings prepended if given."""
+    x = _embed_tokens(cfg, params, batch["tokens"])
+    if cfg.num_prefix_tokens:
+        pre = batch["prefix_embeds"].astype(x.dtype)
+        pre = logical_constraint(pre, P("dp", None, None))
+        x = jnp.concatenate([pre, x], axis=1)
+    return x
+
+
+def _trunk(cfg: ArchConfig, params: dict, x: jax.Array) -> jax.Array:
+    positions = jnp.arange(x.shape[1])
+    block = _remat(cfg, functools.partial(_block_train, cfg))
+
+    def body(carry, lp):
+        return block(carry, lp, positions), None
+
+    x, _ = lax.scan(body, x, params["layers"], unroll=cfg.num_layers if cfg.scan_unroll else 1)
+    return x
+
+
+def _logits(cfg: ArchConfig, params: dict, x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm":
+        x = L.layer_norm(x, params["final_norm_scale"], params["final_norm_bias"])
+    else:
+        x = L.rms_norm(x, params["final_norm_scale"])
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("btd,vd->btv", x, head.astype(x.dtype))
+    return logical_constraint(logits, P("dp", None, "tp"))
+
+
+def loss_fn(params: dict, batch: dict, cfg: ArchConfig) -> tuple[jax.Array, dict]:
+    """Mean next-token CE over positions with label >= 0."""
+    x = _assemble_sequence(cfg, params, batch)
+    x = _trunk(cfg, params, x)
+    logits = _logits(cfg, params, x).astype(jnp.float32)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll) / denom
+    return loss, {"loss": loss, "tokens": denom}
+
+
+def prefill(params: dict, batch: dict, cfg: ArchConfig):
+    """Full-sequence forward building the KV cache; returns (logits, cache)."""
+    x = _assemble_sequence(cfg, params, batch)
+    positions = jnp.arange(x.shape[1])
+    block = _remat(cfg, functools.partial(_block_prefill, cfg))
+
+    def body(carry, lp):
+        x, k, v = block(carry, lp, positions)
+        return x, (k.astype(cfg.activation_dtype()), v.astype(cfg.activation_dtype()))
+
+    x, (ks, vs) = lax.scan(
+        body, x, params["layers"], unroll=cfg.num_layers if cfg.scan_unroll else 1
+    )
+    logits = _logits(cfg, params, x[:, -1:, :])
+    cache = {
+        "k": logical_constraint(ks, _cache_pspec()),
+        "v": logical_constraint(vs, _cache_pspec()),
+        "pos": jnp.array(x.shape[1], jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(params: dict, cache: dict, batch: dict, cfg: ArchConfig):
+    """One new token per sequence against the cache.  batch: tokens (B, 1).
+
+    The cache travels as a scan CARRY updated with one-token
+    dynamic_update_slice writes: XLA keeps while-loop carries in place, so a
+    donated cache updates in-HBM.  (A scan-ys formulation allocates a second
+    full cache — 8+ GiB/device at the 405B decode cell.)"""
+    x = _embed_tokens(cfg, params, batch["tokens"], decode=True)
+    pos = cache["pos"]
+
+    def body(carry, scanned):
+        x, k_all, v_all = carry
+        lp, layer = scanned
+        kc = lax.dynamic_index_in_dim(k_all, layer, axis=0, keepdims=False)
+        vc = lax.dynamic_index_in_dim(v_all, layer, axis=0, keepdims=False)
+        x, kc, vc = _block_decode(cfg, x, lp, kc, vc, pos)
+        k_all = lax.dynamic_update_slice_in_dim(
+            k_all, kc[None].astype(k_all.dtype), layer, axis=0
+        )
+        v_all = lax.dynamic_update_slice_in_dim(
+            v_all, vc[None].astype(v_all.dtype), layer, axis=0
+        )
+        return (x, k_all, v_all), None
+
+    (x, ks, vs), _ = lax.scan(
+        body, (x, cache["k"], cache["v"]),
+        (params["layers"], jnp.arange(cfg.num_layers)),
+        unroll=cfg.num_layers if cfg.scan_unroll else 1,
+    )
+    logits = _logits(cfg, params, x)
+    new_cache = {
+        "k": logical_constraint(ks, _cache_pspec()),
+        "v": logical_constraint(vs, _cache_pspec()),
+        "pos": pos + 1,
+    }
+    return logits, new_cache
+
+
+# ----------------------------------------------------------------------------
+# caches & input specs
+# ----------------------------------------------------------------------------
+
+
+def _cache_pspec() -> P:
+    # (L, B, S, KV, hd): batch over dp, sequence over tp (flash-decode psums)
+    return P(None, "dp", "tp", None, None)
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq: int, abstract: bool = False):
+    shape = (cfg.num_layers, batch, seq, cfg.kv_heads, cfg.hd)
+    dt = cfg.activation_dtype()
+    if abstract:
+        arr = jax.ShapeDtypeStruct(shape, dt)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+    else:
+        arr = jnp.zeros(shape, dt)
+        pos = jnp.array(seq - 1, jnp.int32)
+    return {"k": arr, "v": arr, "pos": pos}
+
+
+def cache_specs(cfg: ArchConfig, batch: int, seq: int):
+    return {"k": _cache_pspec(), "v": _cache_pspec(), "pos": P()}
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (dry-run contract)."""
+    gb, t = shape.global_batch, shape.seq_len
+    pfx = cfg.num_prefix_tokens
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((gb, t - pfx), i32),
+            "labels": jax.ShapeDtypeStruct((gb, t), i32),
+        }
+    elif shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((gb, t - pfx), i32)}
+    else:  # decode: one new token against a seq_len cache
+        specs = {"tokens": jax.ShapeDtypeStruct((gb, 1), i32)}
+    if pfx and shape.kind != "decode":
+        specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (gb, pfx, cfg.d_model), cfg.activation_dtype()
+        )
+    return specs
+
+
+def batch_pspecs(cfg: ArchConfig, shape: ShapeConfig) -> dict[str, P]:
+    specs: dict[str, P] = {}
+    for name in input_specs(cfg, shape):
+        specs[name] = P("dp", None, None) if name == "prefix_embeds" else P("dp", None)
+    return specs
+
+
+register_family(
+    "transformer",
+    ModelImpl(
+        param_defs=param_defs,
+        loss_fn=loss_fn,
+        prefill=prefill,
+        decode_step=decode_step,
+        init_cache=init_cache,
+        cache_specs=cache_specs,
+        input_specs=input_specs,
+    ),
+)

@@ -1,0 +1,146 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Terms (per assignment):
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS_BF16
+    memory     = HLO_bytes_per_device / HBM_BW
+    collective = collective_operand_bytes_per_device / ICI_BW
+
+``cost_analysis()`` on the partitioned module is per-device.  XLA counts
+while-loop bodies ONCE, so scanned-layer models undercount by ~L x; the
+dry-run therefore also compiles small UNROLLED probes (L=1, L=2,
+microbatches=1, unchunked attention) and extrapolates:
+
+    per_layer = cost(L=2) - cost(L=1);   total = cost(L=1) + per_layer*(L-1)
+
+The same probe-diff is applied to collective bytes parsed out of the HLO
+text (operand shapes resolved through an instruction-definition table).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.roofline import hw
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_DEF_RE = re.compile(r"%([\w.\-]+) = \(?([a-z0-9]+)\[([\d,]*)\]")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-device operand bytes of every collective op, by op kind.
+
+    Resolves operand names through the definition table; ops inside while
+    bodies are counted once (see module docstring for the probe correction).
+    """
+    defs: dict[str, int] = {}
+    for m in _DEF_RE.finditer(hlo_text):
+        defs[m.group(1)] = _shape_bytes(m.group(2), m.group(3))
+
+    totals = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:ROOT )?%([\w.\-]+) = .*? ([a-z\-]+)\(", stripped)
+        if not m:
+            continue
+        op = m.group(2)
+        matched = next(
+            (c for c in COLLECTIVE_OPS if op == c or op.startswith(c + "-")), None
+        )
+        if matched is None:
+            continue
+        # operand list between the first '(' after the op name and its ')'
+        call = stripped[stripped.index(op + "(") + len(op) + 1 :]
+        operands = re.findall(r"%([\w.\-]+)", call.split(")")[0])
+        size = sum(defs.get(o, 0) for o in operands)
+        if size == 0:  # fallback: output shape
+            sm = _SHAPE_RE.search(stripped)
+            if sm:
+                size = _shape_bytes(sm.group(1), sm.group(2))
+        totals[matched] += size
+    return totals
+
+
+@dataclasses.dataclass
+class CellCost:
+    flops: float  # per device
+    bytes_accessed: float  # per device
+    coll_bytes: float  # per device
+    coll_breakdown: dict[str, float]
+
+
+def cell_cost(compiled) -> CellCost:
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    return CellCost(
+        flops=float(ca.get("flops", 0.0)),
+        bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+        coll_bytes=float(sum(coll.values())),
+        coll_breakdown={k: float(v) for k, v in coll.items()},
+    )
+
+
+def extrapolate(base1: CellCost, base2: CellCost, layers_probe_delta: int,
+                layers_full_minus_probe1: int) -> CellCost:
+    """cost(L_full) from two unrolled probes."""
+
+    def ext(a1, a2):
+        per = max((a2 - a1) / max(layers_probe_delta, 1), 0.0)
+        return a1 + per * layers_full_minus_probe1
+
+    breakdown = {
+        k: ext(base1.coll_breakdown.get(k, 0), base2.coll_breakdown.get(k, 0))
+        for k in COLLECTIVE_OPS
+    }
+    return CellCost(
+        flops=ext(base1.flops, base2.flops),
+        bytes_accessed=ext(base1.bytes_accessed, base2.bytes_accessed),
+        coll_bytes=sum(breakdown.values()),
+        coll_breakdown=breakdown,
+    )
+
+
+def roofline_terms(cost: CellCost) -> dict[str, float]:
+    compute = cost.flops / hw.PEAK_FLOPS_BF16
+    memory = cost.bytes_accessed / hw.HBM_BW
+    collective = cost.coll_bytes / hw.ICI_BW
+    dominant = max(
+        ("compute", compute), ("memory", memory), ("collective", collective),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dominant,
+    }
+
+
+def model_flops(n_params: int, n_active: int, tokens: int, train: bool) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); decode/prefill use the fwd 2*N*D."""
+    n = n_active or n_params
+    per_token = 6.0 * n if train else 2.0 * n
+    return per_token * tokens

@@ -1,0 +1,9 @@
+"""Target hardware constants (TPU v5e-class, per assignment)."""
+
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+HBM_BYTES = 16 * 2**30  # 16 GiB per chip
+
+SINGLE_POD_CHIPS = 256
+MULTI_POD_CHIPS = 512

@@ -1,0 +1,104 @@
+"""Turn results/dryrun/*.json into the EXPERIMENTS.md §Dry-run / §Roofline
+tables.
+
+    PYTHONPATH=src python -m repro.roofline.report results/dryrun
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from repro.roofline import analyze, hw
+
+
+def load(out_dir: str) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def _fmt_bytes(b: float) -> str:
+    return f"{b / 2**30:.2f}"
+
+
+def _terms(rec: dict) -> dict | None:
+    cost = rec.get("cost_extrapolated") or rec.get("cost_raw")
+    if not cost:
+        return None
+    c = analyze.CellCost(
+        flops=cost["flops"], bytes_accessed=cost["bytes_accessed"],
+        coll_bytes=cost["coll_bytes"], coll_breakdown=cost.get("coll_breakdown", {}),
+    )
+    return analyze.roofline_terms(c)
+
+
+def dryrun_table(recs: list[dict], mesh: str) -> str:
+    rows = [
+        "| arch | shape | status | arg GiB/dev | temp GiB/dev | fits 16G | top collectives |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] != "ok":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['status']} | — | — | — | "
+                f"{r.get('reason', r.get('error', ''))[:60]} |"
+            )
+            continue
+        mem = r["memory"]
+        total = mem["argument_bytes"] + mem["temp_bytes"]
+        fits = "yes" if total <= hw.HBM_BYTES else f"no ({total/2**30:.1f}G)"
+        coll = (r.get("cost_extrapolated") or r.get("cost_raw", {})).get(
+            "coll_breakdown", {}
+        )
+        top = sorted(coll.items(), key=lambda kv: -kv[1])[:2]
+        coll_s = "; ".join(f"{k}:{v/2**20:.0f}M" for k, v in top if v > 0) or "none"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok | {_fmt_bytes(mem['argument_bytes'])} "
+            f"| {_fmt_bytes(mem['temp_bytes'])} | {fits} | {coll_s} |"
+        )
+    return "\n".join(rows)
+
+
+def roofline_table(recs: list[dict]) -> str:
+    rows = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPS/HLO_FLOPS |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != "single" or r["status"] != "ok":
+            continue
+        t = _terms(r)
+        if t is None:
+            continue
+        cost = r.get("cost_extrapolated") or r.get("cost_raw")
+        hlo_total = cost["flops"] * hw.SINGLE_POD_CHIPS
+        ratio = r.get("model_flops_total", 0) / hlo_total if hlo_total else 0.0
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | {t['dominant']} | "
+            f"{ratio:.2f} |"
+        )
+    return "\n".join(rows)
+
+
+def main() -> None:
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    recs = load(out_dir)
+    print("## §Dry-run (single-pod 16x16, 256 chips)\n")
+    print(dryrun_table(recs, "single"))
+    print("\n## §Dry-run (multi-pod 2x16x16, 512 chips)\n")
+    print(dryrun_table(recs, "multi"))
+    print("\n## §Roofline (single-pod, per-device terms)\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

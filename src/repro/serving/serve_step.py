@@ -1,0 +1,70 @@
+"""Serving steps: prefill + batched single-token decode.
+
+``make_serve_fns`` returns jit-ready (prefill, decode_step) closures over a
+config; the decode step donates the cache so the KV buffers update in place.
+``greedy_generate`` is the simple batched driver used by the serving example
+and the smoke tests (temperature-0).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_api import ArchConfig, get_model
+
+
+def make_serve_fns(cfg: ArchConfig, jit: bool = True):
+    impl = get_model(cfg)
+
+    def prefill(params, batch):
+        return impl.prefill(params, batch, cfg)
+
+    def decode(params, cache, tokens):
+        return impl.decode_step(params, cache, {"tokens": tokens}, cfg)
+
+    if jit:
+        prefill = jax.jit(prefill)
+        decode = jax.jit(decode, donate_argnums=(1,))
+    return prefill, decode
+
+
+def greedy_generate(cfg: ArchConfig, params, batch: dict, max_new: int,
+                    cache_len: int | None = None):
+    """Prefill on `batch`, then greedy-decode `max_new` tokens."""
+    impl = get_model(cfg)
+    prefill, decode = make_serve_fns(cfg)
+    logits, cache = prefill(params, batch)
+    b = logits.shape[0]
+    # cache["pos"] is the true prefill length (includes VLM/audio prefixes)
+    total = cache_len or (int(cache["pos"]) + max_new)
+    # re-home the prefill cache into a cache sized for generation
+    big = impl.init_cache(cfg, b, total)
+    big = _copy_cache(cache, big)
+    out = []
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    for _ in range(max_new):
+        out.append(tok)
+        logits, big = decode(params, big, tok)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)
+
+
+def _copy_cache(src: dict, dst: dict) -> dict:
+    out: dict[str, Any] = {}
+    for k, v in dst.items():
+        s = src.get(k)
+        if s is None:
+            out[k] = v
+        elif hasattr(s, "shape") and s.shape == getattr(v, "shape", None):
+            out[k] = s
+        elif hasattr(s, "ndim") and s.ndim >= 3 and s.shape[:2] == v.shape[:2]:
+            # sequence-extending copy: src fills the prefix of dst on axis 2
+            out[k] = jax.lax.dynamic_update_slice_in_dim(
+                v, s.astype(v.dtype), 0, axis=2
+            )
+        else:
+            out[k] = s
+    return out

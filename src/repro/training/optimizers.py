@@ -1,0 +1,279 @@
+"""Pure-JAX pytree optimizers: AdamW, Adafactor, SGD-momentum.
+
+Adafactor (factored second moments, no first moment by default) is what the
+>=100B configs use so optimizer state fits 16 GB/chip HBM: for a (.., n, m)
+weight it stores one (.., n) row and one (.., m) column accumulator instead
+of an (.., n, m) second moment (Shazeer & Stern 2018).
+
+State layout mirrors the param tree (same shardings apply), so checkpointing
+and elastic resharding treat optimizer state exactly like params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]  # (grads, state, params, step) -> (new_params, new_state)
+    state_specs: Callable[[Any, Any], Any]  # (param_spec_tree, param_struct) -> state spec tree
+
+
+def _tree_zeros_like(params, dtype=None):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, dtype or p.dtype), params)
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.reduce(
+        lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))), tree, jnp.float32(0)
+    )
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+def _decay_mask(path: tuple) -> bool:
+    """True if weight decay applies (skip norms, biases, 1-d params)."""
+    name = str(path[-1].key if hasattr(path[-1], "key") else path[-1])
+    return not any(s in name for s in ("scale", "bias", "b_", "ln"))
+
+
+# ----------------------------------------------------------------------------
+# AdamW
+# ----------------------------------------------------------------------------
+
+
+def adamw(
+    lr: Callable[[jax.Array], jax.Array] | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.float32(lr))
+
+    def init(params):
+        return {
+            "m": _tree_zeros_like(params, jnp.float32),
+            "v": _tree_zeros_like(params, jnp.float32),
+        }
+
+    def update(grads, state, params, step, specs=None):
+        del specs  # adamw state/updates share the param shape, sharding follows
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+
+        def upd(path, g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * g32 * g32
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and _decay_mask(path):
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), m, v
+
+        flat = jax.tree_util.tree_map_with_path(
+            lambda path, g, m, v, p: upd(path, g, m, v, p),
+            grads, state["m"], state["v"], params,
+        )
+        new_params = jax.tree.map(lambda x: x[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda x: x[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda x: x[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v}, {"grad_norm": gnorm, "lr": lr_t}
+
+    def state_specs(param_specs, _params_struct):
+        return {"m": param_specs, "v": param_specs}
+
+    return Optimizer(init=init, update=update, state_specs=state_specs)
+
+
+# ----------------------------------------------------------------------------
+# Adafactor
+# ----------------------------------------------------------------------------
+
+
+def adafactor(
+    lr: Callable[[jax.Array], jax.Array] | float,
+    *,
+    decay: float = 0.99,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+    clip_norm: float = 0.0,  # 0 = no global clip: adafactor's per-param RMS
+    # clipping replaces it (T5 practice) and the global-norm pass would
+    # materialize f32 copies of every grad stack — a multi-GiB HBM hit at 405B
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.float32(lr))
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+    def init(params):
+        def leaf(p):
+            if _factored(p):
+                return {
+                    "r": jnp.zeros(p.shape[:-1], jnp.float32),  # row accumulator
+                    "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return jax.tree.map(leaf, params)
+
+    def update(grads, state, params, step, specs=None):
+        if clip_norm:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = jnp.float32(0)
+        lr_t = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t**-0.8  # standard adafactor decay schedule, capped
+        beta = jnp.minimum(beta, decay)
+
+        def upd_leaf(decay_this, g, s, p, slice_spec=None):
+            if slice_spec is not None:
+                # keep per-slice math sharded like the param: without this the
+                # lax.map body loses the annotation and XLA replicates the
+                # update (a full f32 weight slice per device at 405B scale)
+                from repro.distributed.meshes import logical_constraint
+
+                g = logical_constraint(g, slice_spec)
+                p = logical_constraint(p, slice_spec)
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if _factored(p):
+                r = beta * s["r"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                c = beta * s["c"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rmean = jnp.mean(r, axis=-1, keepdims=True)
+                vhat = (r / jnp.maximum(rmean, eps))[..., None] * c[..., None, :]
+                u = g32 / jnp.sqrt(jnp.maximum(vhat, eps))
+                new_s = {"r": r, "c": c}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g32 / jnp.sqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            # RMS update clipping (per logical parameter)
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay and decay_this:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), new_s
+
+        def upd(path, g, s, p, spec=None):
+            decay_this = bool(weight_decay) and _decay_mask(path)
+            # Layer-stacked (L, n, m) weights: run the update per layer slice
+            # (lax.map) so the f32 intermediates are one-layer-sized instead
+            # of whole-stack-sized — this is what keeps the >=100B update
+            # inside HBM, and per-layer RMS clipping is the semantically
+            # correct granularity anyway (each layer is a logical parameter).
+            if p.ndim >= 3 and p.shape[0] > 4:
+                from jax.sharding import PartitionSpec as PS
+
+                slice_spec = PS(*tuple(spec)[1:]) if spec is not None else None
+                return jax.lax.map(
+                    lambda gsp: upd_leaf(decay_this, *gsp, slice_spec=slice_spec),
+                    (g, s, p),
+                )
+            return upd_leaf(decay_this, g, s, p)
+
+        flat = _map_with_state(upd, grads, state, params, specs)
+        new_params = jax.tree.map(lambda x: x[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_state = jax.tree.map(lambda x: x[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr_t}
+
+    def state_specs(param_specs, params_struct):
+        from jax.sharding import PartitionSpec as P
+
+        def leaf(spec, p):
+            if _factored(p):
+                entries = list(spec) + [None] * (p.ndim - len(spec))
+                return {"r": P(*entries[:-1]), "c": P(*(entries[:-2] + entries[-1:]))}
+            return {"v": spec}
+
+        return jax.tree.map(leaf, param_specs, params_struct, is_leaf=_is_pspec)
+
+    return Optimizer(init=init, update=update, state_specs=state_specs)
+
+
+def _map_with_state(fn, grads, state, params, specs=None):
+    """tree_map_with_path where `state` leaves are {r,c}/{v} dicts."""
+    flat_g = jax.tree_util.tree_flatten_with_path(grads)[0]
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    state_leaves = _collect_state_leaves(state)
+    if specs is None:
+        spec_leaves = [None] * len(flat_g)
+    else:
+        spec_leaves = jax.tree_util.tree_leaves(specs, is_leaf=_is_pspec)
+    out = [
+        fn(path, g, s, p, spec)
+        for (path, g), s, (_, p), spec in zip(flat_g, state_leaves, flat_p, spec_leaves)
+    ]
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(params), out)
+
+
+def _collect_state_leaves(state):
+    is_leaf = lambda x: isinstance(x, dict) and set(x) <= {"r", "c", "v"}  # noqa: E731
+    return jax.tree_util.tree_leaves(state, is_leaf=is_leaf)
+
+
+def _is_pspec(x) -> bool:
+    from jax.sharding import PartitionSpec
+
+    return isinstance(x, PartitionSpec)
+
+
+# ----------------------------------------------------------------------------
+# SGD + momentum
+# ----------------------------------------------------------------------------
+
+
+def sgdm(
+    lr: Callable[[jax.Array], jax.Array] | float,
+    *,
+    momentum: float = 0.9,
+    weight_decay: float = 0.0,
+    clip_norm: float = 1.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.float32(lr))
+
+    def init(params):
+        return {"m": _tree_zeros_like(params, jnp.float32)}
+
+    def update(grads, state, params, step, specs=None):
+        del specs
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr_t = lr_fn(step)
+
+        def upd(path, g, m, p):
+            g32 = g.astype(jnp.float32)
+            if weight_decay and _decay_mask(path):
+                g32 = g32 + weight_decay * p.astype(jnp.float32)
+            m = momentum * m + g32
+            return (p.astype(jnp.float32) - lr_t * m).astype(p.dtype), m
+
+        flat = jax.tree_util.tree_map_with_path(upd, grads, state["m"], params)
+        new_params = jax.tree.map(lambda x: x[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda x: x[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m}, {"grad_norm": gnorm, "lr": lr_t}
+
+    def state_specs(param_specs, _params_struct):
+        return {"m": param_specs}
+
+    return Optimizer(init=init, update=update, state_specs=state_specs)
+
+
+def make_optimizer(name: str, lr, **kw) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor, "sgdm": sgdm}[name](lr, **kw)

@@ -1,0 +1,85 @@
+"""Train-step factory: loss -> grads (with microbatch accumulation) ->
+optimizer update, all inside one jit-able function.
+
+Gradient accumulation: the global batch is split into cfg.microbatches_train
+microbatches scanned sequentially with f32 gradient accumulation — this is
+what bounds activation memory for the >=100B cells (DESIGN.md §4).
+
+Cross-pod gradient compression: the grads that cross the "pod" axis can be
+psum'd in bf16 (grad_compression="bf16"), halving the only cross-pod
+collective's bytes.  Implemented as a cast-before-constraint so XLA's
+all-reduce runs at the narrow width.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_api import ArchConfig, get_model
+from repro.training.optimizers import Optimizer
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    optimizer: Optimizer,
+    *,
+    grad_compression: str = "none",  # "none" | "bf16"
+    loss_fn: Callable | None = None,
+    param_specs=None,  # logical PartitionSpec tree: keeps optimizer math sharded
+) -> Callable:
+    """Returns train_step(params, opt_state, batch, step) ->
+    (params, opt_state, metrics)."""
+    impl = get_model(cfg)
+    loss_fn = loss_fn or impl.loss_fn
+    m = max(int(cfg.microbatches_train), 1)
+
+    def _grads(params, batch):
+        def lf(p, b):
+            loss, metrics = loss_fn(p, b, cfg)
+            return loss, metrics
+
+        # clamp microbatch count to what the actual batch divides into
+        b0 = jax.tree.leaves(batch)[0].shape[0]
+        m_eff = m
+        while b0 % m_eff != 0:
+            m_eff -= 1
+        if m_eff == 1:
+            (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        def split(x):
+            return x.reshape((m_eff, x.shape[0] // m_eff) + x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+        acc_dt = jnp.dtype(cfg.grad_accum_dtype)
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+        inv_m = 1.0 / m_eff  # fold the mean into the accumulation (one less
+        # full-gradient-stack temp than a post-hoc divide)
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            (loss, _), grads = jax.value_and_grad(lf, has_aux=True)(params, mb)
+            acc = jax.tree.map(
+                lambda a, g: a + (g * jnp.asarray(inv_m, g.dtype)).astype(acc_dt),
+                acc, grads,
+            )
+            return (acc, loss_acc + loss), None
+
+        (grads, loss_sum), _ = jax.lax.scan(body, (g0, jnp.float32(0)), micro)
+        loss = loss_sum / m_eff
+        return loss, {"loss": loss}, grads
+
+    def train_step(params, opt_state, batch, step):
+        loss, metrics, grads = _grads(params, batch)
+        if grad_compression == "bf16":
+            grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+        new_params, new_opt_state, opt_metrics = optimizer.update(
+            grads, opt_state, params, step, specs=param_specs
+        )
+        out_metrics = {"loss": loss, **opt_metrics}
+        return new_params, new_opt_state, out_metrics
+
+    return train_step

@@ -1,0 +1,27 @@
+"""Shared fixtures.  NOTE: device count is NOT forced here — smoke tests and
+benches must see the real single device; only launch/dryrun.py (and the
+subprocess-based distributed tests) set xla_force_host_platform_device_count.
+"""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--run-slow", action="store_true", default=False, help="run slow tests"
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--run-slow"):
+        return
+    skip = pytest.mark.skip(reason="slow; use --run-slow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)

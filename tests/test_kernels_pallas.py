@@ -1,0 +1,113 @@
+"""Per-kernel correctness: Pallas (interpret mode) and chunked-XLA streaming
+vs the dense oracle, swept over shapes, dtypes, and kernel functions —
+including a hypothesis property sweep."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.kernels import KERNEL_NAMES, kernel_matrix
+from repro.kernels import ops
+
+SHAPES = [
+    (7, 13, 1),  # awkward/odd
+    (32, 64, 3),
+    (129, 257, 2),  # just past tile boundaries
+    (256, 300, 4),
+]
+
+
+def _dense(kern, a, b, sigma):
+    return np.asarray(kernel_matrix(kern, a, b, sigma))
+
+
+@pytest.mark.parametrize("kern", KERNEL_NAMES)
+@pytest.mark.parametrize("m,n,k", SHAPES)
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+def test_kernel_matvec_allclose(rng, kern, m, n, k, backend):
+    d = 11
+    a = rng.standard_normal((m, d)).astype(np.float32)
+    b = rng.standard_normal((n, d)).astype(np.float32)
+    v = rng.standard_normal((n, k)).astype(np.float32)
+    sigma = 1.7
+    want = _dense(kern, a, b, sigma) @ v
+    got = np.asarray(
+        ops.kernel_matvec(a, b, v, kernel=kern, sigma=sigma, backend=backend,
+                          chunk_a=64, chunk_b=96)
+    )
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("kern", KERNEL_NAMES)
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+def test_kernel_block_allclose(rng, kern, backend):
+    a = rng.standard_normal((53, 9)).astype(np.float32)
+    b = rng.standard_normal((171, 9)).astype(np.float32)
+    want = _dense(kern, a, b, 0.9)
+    got = np.asarray(ops.kernel_block(a, b, kernel=kern, sigma=0.9, backend=backend))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("kern", KERNEL_NAMES)
+def test_kernel_matvec_1d_vector(rng, kern):
+    a = rng.standard_normal((19, 5)).astype(np.float32)
+    b = rng.standard_normal((37, 5)).astype(np.float32)
+    v = rng.standard_normal(37).astype(np.float32)
+    want = _dense(kern, a, b, 1.1) @ v
+    for backend in ("xla", "interpret"):
+        got = np.asarray(
+            ops.kernel_matvec(a, b, v, kernel=kern, sigma=1.1, backend=backend)
+        )
+        assert got.shape == (19,)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_bf16_inputs_accumulate_f32(rng):
+    """bf16 operands must still produce f32-accumulated output."""
+    a = rng.standard_normal((33, 8)).astype(np.float32)
+    b = rng.standard_normal((65, 8)).astype(np.float32)
+    v = rng.standard_normal((65, 2)).astype(np.float32)
+    want = _dense("rbf", a, b, 1.3) @ v
+    got = np.asarray(
+        ops.kernel_matvec(
+            jnp.asarray(a, jnp.bfloat16), jnp.asarray(b, jnp.bfloat16),
+            jnp.asarray(v, jnp.bfloat16), kernel="rbf", sigma=1.3,
+            backend="interpret",
+        )
+    )
+    assert got.dtype == np.float32
+    np.testing.assert_allclose(got, want, rtol=0.07, atol=0.05)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    n=st.integers(1, 70),
+    d=st.integers(1, 16),
+    kern=st.sampled_from(KERNEL_NAMES),
+    seed=st.integers(0, 2**16),
+)
+def test_property_matvec_matches_oracle(m, n, d, kern, seed):
+    r = np.random.default_rng(seed)
+    a = r.standard_normal((m, d)).astype(np.float32)
+    b = r.standard_normal((n, d)).astype(np.float32)
+    v = r.standard_normal((n, 1)).astype(np.float32)
+    want = _dense(kern, a, b, 1.0) @ v
+    got = np.asarray(
+        ops.kernel_matvec(a, b, v, kernel=kern, sigma=1.0, backend="interpret")
+    )
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), kern=st.sampled_from(KERNEL_NAMES))
+def test_property_kernel_matrix_invariants(seed, kern):
+    """k(x,x)=1 on the diagonal; symmetry; values in (0, 1]."""
+    r = np.random.default_rng(seed)
+    x = r.standard_normal((24, 6)).astype(np.float32)
+    k = np.asarray(ops.kernel_block(x, x, kernel=kern, sigma=1.5, backend="xla"))
+    np.testing.assert_allclose(np.diag(k), 1.0, atol=1e-5)
+    np.testing.assert_allclose(k, k.T, atol=1e-5)
+    assert (k > 0).all() and (k <= 1 + 1e-5).all()

@@ -1,0 +1,147 @@
+"""Per-architecture smoke tests: every assigned arch instantiates at REDUCED
+size and runs one forward/train step on CPU — output shapes + no NaNs —
+plus prefill/decode parity for the families where decode is exact."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_config, get_reduced_config
+from repro.data import synthetic
+from repro.models.model_api import get_model, init_params
+from repro.training.optimizers import make_optimizer
+from repro.training.train_step import make_train_step
+
+B, T = 2, 16
+
+
+def _finite(tree) -> bool:
+    return all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(tree))
+
+
+def _batch(cfg):
+    return synthetic.batch_for(cfg, (B, T), seed=0, step=0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_forward_and_grads(arch):
+    cfg = get_reduced_config(arch)
+    impl = get_model(cfg)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    loss, metrics = impl.loss_fn(params, batch, cfg)
+    assert np.isfinite(float(loss))
+    # random-init loss should be near ln(padded vocab)
+    assert 0.5 * np.log(cfg.padded_vocab()) < float(loss) < 1.5 * np.log(cfg.padded_vocab())
+    grads = jax.grad(lambda p: impl.loss_fn(p, batch, cfg)[0])(params)
+    assert _finite(grads)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_train_step_improves_loss(arch):
+    cfg = get_reduced_config(arch)
+    opt = make_optimizer("adamw", 3e-3)
+    step = jax.jit(make_train_step(cfg, opt))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt_state = opt.init(params)
+    batch = _batch(cfg)  # same batch -> loss must drop
+    losses = []
+    for i in range(8):
+        params, opt_state, m = step(params, opt_state, batch, jnp.int32(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], losses
+    assert _finite(params)
+
+
+@pytest.mark.parametrize(
+    "arch",
+    [a for a in ARCH_IDS if a not in ("jamba-1.5-large-398b",)],
+)
+def test_decode_matches_prefill(arch):
+    """Greedy decode logits must equal a longer prefill's last-position
+    logits.  (Jamba's prefill intentionally zeroes Mamba decode states —
+    documented in hybrid.prefill — so it is checked separately.)"""
+    cfg = get_reduced_config(arch)
+    impl = get_model(cfg)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    batch = _batch(cfg)
+    batch.pop("labels", None)
+    logits_p, cache = impl.prefill(params, batch, cfg)
+    big = impl.init_cache(cfg, B, T + 4)
+    for k, v in cache.items():
+        if k not in big:
+            continue
+        tgt = big[k]
+        if hasattr(v, "ndim") and v.ndim >= 3 and v.shape != tgt.shape:
+            big[k] = jax.lax.dynamic_update_slice_in_dim(
+                tgt, v.astype(tgt.dtype), 0, axis=2
+            )
+        else:
+            big[k] = v
+    nt = jnp.argmax(logits_p[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    logits_d, _ = impl.decode_step(params, big, {"tokens": nt}, cfg)
+    batch2 = dict(batch)
+    batch2["tokens"] = jnp.concatenate([batch["tokens"], nt], axis=1)
+    logits_chk, _ = impl.prefill(params, batch2, cfg)
+    # MoE archs: capacity-based dispatch depends on the token population, and
+    # router near-ties flip under fp reassociation -> small logit deltas are
+    # expected (same behaviour as Switch/GShard-style serving); dense archs
+    # must match tightly.
+    tol = 5e-2 if cfg.num_experts else 2e-3
+    np.testing.assert_allclose(
+        np.asarray(logits_d[:, 0]), np.asarray(logits_chk[:, -1]),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_jamba_decode_runs_and_is_stateful():
+    cfg = get_reduced_config("jamba-1.5-large-398b")
+    impl = get_model(cfg)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    cache = impl.init_cache(cfg, B, T)
+    cache["pos"] = jnp.array(0, jnp.int32)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits1, cache = impl.decode_step(params, cache, {"tokens": tok}, cfg)
+    logits2, cache = impl.decode_step(params, cache, {"tokens": tok}, cfg)
+    assert np.isfinite(np.asarray(logits1)).all()
+    # state must influence the second step (mamba/attention carry)
+    assert not np.allclose(np.asarray(logits1), np.asarray(logits2))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_param_defs_consistent(arch):
+    """Full (published) configs: shapes/specs well-formed without allocation."""
+    cfg = get_config(arch)
+    impl = get_model(cfg)
+    defs = impl.param_defs(cfg)
+    for path, (shape, spec) in defs.items():
+        assert len(spec) <= len(shape), (path, shape, spec)
+        assert all(dim > 0 for dim in shape), (path, shape)
+    n = cfg.n_params()
+    assert n > 0
+    # sanity vs the advertised scale
+    advertised = {
+        "whisper-base": 0.07e9, "grok-1-314b": 314e9, "deepseek-moe-16b": 16.4e9,
+        "qwen2-1.5b": 1.5e9, "chatglm3-6b": 6.2e9, "command-r-plus-104b": 104e9,
+        "llama3-405b": 405e9, "rwkv6-1.6b": 1.6e9,
+        "jamba-1.5-large-398b": 398e9, "llava-next-mistral-7b": 7.2e9,
+    }[arch]
+    assert 0.75 * advertised < n < 1.35 * advertised, (arch, n)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_input_specs_cover_all_shapes(arch):
+    from repro.models.model_api import ALL_SHAPES, shape_applicable
+
+    cfg = get_config(arch)
+    impl = get_model(cfg)
+    for shape in ALL_SHAPES:
+        ok, _ = shape_applicable(cfg, shape)
+        if not ok:
+            continue
+        specs = impl.input_specs(cfg, shape)
+        assert "tokens" in specs
+        for name, s in specs.items():
+            assert isinstance(s, jax.ShapeDtypeStruct), name
+            assert s.shape[0] == shape.global_batch

@@ -1,0 +1,64 @@
+"""Roofline machinery: HLO collective parsing against hand-built text,
+extrapolation math, and term computation."""
+
+import numpy as np
+
+from repro.roofline import analyze, hw
+
+HLO = """
+HloModule test
+
+ENTRY main {
+  %p0 = f32[128,64]{1,0} parameter(0)
+  %p1 = bf16[32,16]{1,0} parameter(1)
+  %ag = f32[512,64]{1,0} all-gather(%p0), dimensions={0}
+  %ar = f32[128,64]{1,0} all-reduce(%p0), to_apply=%sum
+  %rs = bf16[8,16]{1,0} reduce-scatter(%p1), dimensions={0}
+  %cp = bf16[32,16]{1,0} collective-permute(%p1), source_target_pairs={{0,1}}
+  %aa = bf16[32,16]{1,0} all-to-all(%p1), dimensions={0}
+  %ags = f32[256,64]{1,0} all-gather-start(%p0), dimensions={0}
+  %dot = f32[128,128]{1,0} dot(%p0, %p0), lhs_contracting_dims={1}, rhs_contracting_dims={1}
+}
+"""
+
+
+def test_collective_bytes_parsing():
+    got = analyze.collective_bytes(HLO)
+    p0 = 128 * 64 * 4  # 32768
+    p1 = 32 * 16 * 2  # 1024
+    assert got["all-gather"] == 2 * p0  # all-gather + all-gather-start
+    assert got["all-reduce"] == p0
+    assert got["reduce-scatter"] == p1
+    assert got["collective-permute"] == p1
+    assert got["all-to-all"] == p1
+
+
+def test_extrapolation_linear():
+    c1 = analyze.CellCost(flops=10.0, bytes_accessed=100.0, coll_bytes=4.0,
+                          coll_breakdown={"all-reduce": 4.0})
+    c2 = analyze.CellCost(flops=16.0, bytes_accessed=130.0, coll_bytes=6.0,
+                          coll_breakdown={"all-reduce": 6.0})
+    full = analyze.extrapolate(c1, c2, 1, 9)  # 10 layers total
+    assert full.flops == 10.0 + 6.0 * 9
+    assert full.bytes_accessed == 100.0 + 30.0 * 9
+    assert full.coll_breakdown["all-reduce"] == 4.0 + 2.0 * 9
+
+
+def test_roofline_terms_and_dominance():
+    c = analyze.CellCost(
+        flops=hw.PEAK_FLOPS_BF16,  # 1 second of compute
+        bytes_accessed=hw.HBM_BW / 2,  # 0.5 s
+        coll_bytes=hw.ICI_BW / 4,  # 0.25 s
+        coll_breakdown={},
+    )
+    t = analyze.roofline_terms(c)
+    assert t["compute_s"] == 1.0
+    assert t["memory_s"] == 0.5
+    assert t["collective_s"] == 0.25
+    assert t["dominant"] == "compute"
+
+
+def test_model_flops():
+    assert analyze.model_flops(100, 0, 10, train=True) == 6000
+    assert analyze.model_flops(100, 40, 10, train=True) == 2400  # MoE active
+    assert analyze.model_flops(100, 0, 10, train=False) == 2000

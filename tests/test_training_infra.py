@@ -1,0 +1,208 @@
+"""Training substrate: optimizer math vs numpy references, grad-accumulation
+equivalence, schedules, checkpoint roundtrip/crash-consistency/elastic
+restore, data determinism, serving generate."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpointer
+from repro.configs.base import get_reduced_config
+from repro.data import synthetic
+from repro.data.pipeline import LMDataPipeline
+from repro.models.model_api import get_model, init_params
+from repro.serving.serve_step import greedy_generate
+from repro.training.optimizers import adafactor, adamw, global_norm, make_optimizer, sgdm
+from repro.training.schedules import warmup_cosine
+from repro.training.train_step import make_train_step
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_matches_reference(rng):
+    p0 = rng.standard_normal((4, 6)).astype(np.float32)
+    g = rng.standard_normal((4, 6)).astype(np.float32)
+    opt = adamw(0.1, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0, clip_norm=1e9)
+    params = {"w": jnp.asarray(p0)}
+    state = opt.init(params)
+    new_params, _, _ = opt.update({"w": jnp.asarray(g)}, state, params, jnp.int32(0))
+    # step 0 reference
+    m = 0.1 * g / (1 - 0.9)
+    v = 0.01 * g * g / (1 - 0.99)
+    want = p0 - 0.1 * (m / (np.sqrt(v) + 1e-8))
+    np.testing.assert_allclose(np.asarray(new_params["w"]), want, rtol=1e-5)
+
+
+def test_adamw_weight_decay_mask():
+    params = {"w": jnp.ones((3, 3)), "ln_scale": jnp.ones((3,))}
+    opt = adamw(0.1, weight_decay=0.5, clip_norm=1e9)
+    state = opt.init(params)
+    zero_g = jax.tree.map(jnp.zeros_like, params)
+    new_params, _, _ = opt.update(zero_g, state, params, jnp.int32(0))
+    assert float(jnp.abs(new_params["w"] - 1).max()) > 0  # decayed
+    np.testing.assert_allclose(np.asarray(new_params["ln_scale"]), 1.0)  # masked
+
+
+def test_adafactor_factored_state_and_descent(rng):
+    # stacked (L, n, m) leaf exercises the per-layer lax.map path
+    params = {"w": jnp.asarray(rng.standard_normal((6, 32, 16)).astype(np.float32))}
+    opt = adafactor(0.05)
+    state = opt.init(params)
+    assert state["w"]["r"].shape == (6, 32) and state["w"]["c"].shape == (6, 16)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"]))
+
+    p = params
+    prev = float(loss(p))
+    for i in range(5):
+        g = jax.grad(loss)(p)
+        p, state, _ = opt.update(g, state, p, jnp.int32(i))
+    assert float(loss(p)) < prev
+
+
+def test_sgdm_descent(rng):
+    params = {"w": jnp.asarray(rng.standard_normal((8,)).astype(np.float32))}
+    opt = sgdm(0.1, momentum=0.9)
+    state = opt.init(params)
+    for i in range(10):
+        g = jax.tree.map(lambda w: 2 * w, params)
+        params, state, _ = opt.update(g, state, params, jnp.int32(i))
+    assert float(jnp.linalg.norm(params["w"])) < 1.0
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert float(global_norm(t)) == pytest.approx(5.0)
+
+
+def test_schedule_warmup_cosine():
+    s = warmup_cosine(1.0, 10, 100, floor=0.1)
+    assert float(s(jnp.int32(0))) == pytest.approx(0.0)
+    assert float(s(jnp.int32(10))) == pytest.approx(1.0, rel=1e-3)
+    assert float(s(jnp.int32(100))) == pytest.approx(0.1, rel=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# grad accumulation
+# ---------------------------------------------------------------------------
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    import dataclasses
+
+    cfg = get_reduced_config("qwen2-1.5b")
+    batch = synthetic.batch_for(cfg, (4, 16), seed=0, step=0)
+    opt = make_optimizer("sgdm", 0.01, momentum=0.0, clip_norm=1e9)
+
+    results = {}
+    for m in (1, 2):
+        cfg_m = dataclasses.replace(cfg, microbatches_train=m)
+        step = make_train_step(cfg_m, opt)
+        params = init_params(jax.random.PRNGKey(0), cfg_m)
+        opt_state = opt.init(params)
+        new_params, _, metrics = step(params, opt_state, batch, jnp.int32(0))
+        results[m] = (new_params, float(metrics["loss"]))
+    np.testing.assert_allclose(results[1][1], results[2][1], rtol=1e-5)
+    for l1, l2 in zip(jax.tree.leaves(results[1][0]), jax.tree.leaves(results[2][0])):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=2e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def _tree(rng):
+    return {
+        "params": {"w": jnp.asarray(rng.standard_normal((4, 3)).astype(np.float32)),
+                   "stack": (jnp.ones((2, 2)), jnp.zeros((3,)))},
+        "opt_state": {"m": {"w": jnp.zeros((4, 3))}},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path, rng):
+    state = _tree(rng)
+    checkpointer.save(str(tmp_path), 7, state, extra={"data": {"seed": 1, "step": 7}})
+    restored, extra, step = checkpointer.restore(str(tmp_path))
+    assert step == 7 and extra["data"]["step"] == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_crash_consistency(tmp_path, rng):
+    state = _tree(rng)
+    checkpointer.save(str(tmp_path), 5, state)
+    # simulate a crash mid-write of step 9: .tmp dir must be ignored
+    os.makedirs(tmp_path / "step_00000009.tmp")
+    (tmp_path / "step_00000009.tmp" / "arrays.npz").write_bytes(b"garbage")
+    assert checkpointer.latest_step(str(tmp_path)) == 5
+    _, _, step = checkpointer.restore(str(tmp_path))
+    assert step == 5
+
+
+def test_checkpoint_gc(tmp_path, rng):
+    state = _tree(rng)
+    for s in (1, 2, 3, 4, 5):
+        checkpointer.save(str(tmp_path), s, state, keep_last=2)
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert kept == ["step_00000004", "step_00000005"]
+
+
+def test_checkpoint_elastic_restore_resharding(tmp_path, rng):
+    """Restore with explicit shardings (single device here; the relayout path
+    is identical for any mesh since device_put handles distribution)."""
+    state = _tree(rng)
+    checkpointer.save(str(tmp_path), 3, state)
+    sh = jax.tree.map(
+        lambda _: jax.sharding.SingleDeviceSharding(jax.devices()[0]), state
+    )
+    restored, _, _ = checkpointer.restore(str(tmp_path), shardings=sh)
+    for leaf in jax.tree.leaves(restored):
+        assert isinstance(leaf, jax.Array)
+
+
+# ---------------------------------------------------------------------------
+# data determinism + serving
+# ---------------------------------------------------------------------------
+
+
+def test_data_pipeline_deterministic_and_resumable():
+    cfg = get_reduced_config("qwen2-1.5b")
+    p1 = LMDataPipeline(cfg, 4, 16, seed=3)
+    batches = [next(p1) for _ in range(3)]
+    # resume from state after 2 batches
+    p2 = LMDataPipeline.from_state(cfg, 4, 16, {"seed": 3, "step": 2})
+    b3 = next(p2)
+    np.testing.assert_array_equal(np.asarray(batches[2]["tokens"]), np.asarray(b3["tokens"]))
+    # labels are next-token shifted
+    assert batches[0]["tokens"].shape == (4, 16)
+
+
+def test_greedy_generate_smoke():
+    cfg = get_reduced_config("qwen2-1.5b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = synthetic.batch_for(cfg, (2, 12), 0, 0)
+    batch.pop("labels")
+    out = greedy_generate(cfg, params, batch, max_new=5)
+    assert out.shape == (2, 5)
+    assert (np.asarray(out) >= 0).all()
+
+
+def test_greedy_generate_matches_prefill_argmax():
+    cfg = get_reduced_config("chatglm3-6b")
+    impl = get_model(cfg)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = synthetic.batch_for(cfg, (2, 10), 0, 0)
+    batch.pop("labels")
+    out = greedy_generate(cfg, params, batch, max_new=3)
+    # cross-check token 0 against prefill argmax
+    logits_p, _ = impl.prefill(params, batch, cfg)
+    want0 = np.asarray(jnp.argmax(logits_p[:, -1], axis=-1))
+    np.testing.assert_array_equal(np.asarray(out[:, 0]), want0)
