@@ -5,6 +5,7 @@
 #   table2    — per-iteration cost/storage scaling (Table 2)
 #   ablation  — Nystrom/accel/rho/sampling ablations (Figs. 10-11, §6.4)
 #   kernels   — fused kernel-matvec hot-spot microbench + Pallas tile analysis
+#   multirhs  — batched (n, t) one-vs-all solve vs t sequential solves
 #
 # Scaled to CPU execution (the container is the oracle runtime; TPU numbers
 # come from the dry-run roofline in EXPERIMENTS.md).  Select a subset with
@@ -21,6 +22,7 @@ def main() -> None:
         bench_fig1_showdown,
         bench_fig9_convergence,
         bench_kernels,
+        bench_multirhs,
         bench_table2_scaling,
     )
 
@@ -30,6 +32,7 @@ def main() -> None:
         "fig9": bench_fig9_convergence.main,
         "ablation": bench_ablation.main,
         "fig1": bench_fig1_showdown.main,
+        "multirhs": bench_multirhs.main,
     }
     want = sys.argv[1:] or list(benches)
     failed = []

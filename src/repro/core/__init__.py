@@ -3,18 +3,22 @@ project solvers for full KRR, plus every baseline the paper compares against.
 """
 
 from repro.core.askotch import ASkotchConfig, SolveResult, solve, solve_scan
-from repro.core.krr import KRRProblem, evaluate
+from repro.core.krr import KRRProblem, evaluate, evaluate_per_head
+from repro.core.operator import KernelOperator
 from repro.core.skotch import solve_skotch
-from repro.core.solver_api import METHODS, SolveOutput
+from repro.core.solver_api import METHOD_OPTIONS, METHODS, SolveOutput
 from repro.core.solver_api import solve as solve_any
 
 __all__ = [
     "ASkotchConfig",
     "KRRProblem",
+    "KernelOperator",
     "METHODS",
+    "METHOD_OPTIONS",
     "SolveOutput",
     "SolveResult",
     "evaluate",
+    "evaluate_per_head",
     "solve",
     "solve_any",
     "solve_scan",

@@ -1,15 +1,20 @@
 """Skotch (Algorithm 2) and ASkotch (Algorithm 3): approximate sketch-and-
 project solvers for full KRR.
 
-Per iteration (blocksize b, Nystrom rank r, n training points):
+Per iteration (blocksize b, Nystrom rank r, n training points, t heads):
   1. sample block B                          — uniform or ARLS (paper §3.1)
   2. K_BB                                    — fused block build, O(b^2 d)
   3. K_hat_BB = Nystrom(K_BB, r)             — Algorithm 4, O(b^2 r)
   4. rho = lam + lam_r(K_hat_BB) ("damped")  — paper §3.2 default
   5. L_PB via randomized powering            — Algorithm 5, O(b r + b^2) * 10
-  6. g_B = (K_lam)_{B,:} z - y_B             — fused kernel matvec, O(n b d)  << hot spot
-  7. d_B = (K_hat_BB + rho I)^{-1} g_B       — Woodbury, O(b r)
-  8. iterate updates (+ Nesterov mixing for ASkotch), O(n)
+  6. G_B = (K_lam)_{B,:} Z - Y_B             — fused kernel matvec, O(n b d)  << hot spot
+  7. D_B = (K_hat_BB + rho I)^{-1} G_B       — Woodbury, O(b r t)
+  8. iterate updates (+ Nesterov mixing for ASkotch), O(n t)
+
+The solve is multi-RHS throughout: with Y of shape (n, t) (one-vs-all heads)
+steps 1-5 are shared across all t heads and steps 6-8 batch over columns, so
+a t-head solve performs the kernel-tile work of a single solve per iteration.
+A 1-D y is the t = 1 special case (1-D w out, no API change).
 
 Defaults (paper §3.2): b = n/100, r = 100, uniform sampling,
 mu_hat = lam (clipped so mu_hat <= nu_hat and mu_hat * nu_hat <= 1),
@@ -40,7 +45,6 @@ from repro.core.nystrom import (
     stable_inv_apply_setup,
     woodbury_inv_apply,
 )
-from repro.kernels import ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,12 +69,12 @@ class ASkotchConfig:
 
 
 class SolverState(NamedTuple):
-    w: jax.Array  # (n,) primal iterate
-    v: jax.Array  # (n,) acceleration sequence (= w when not accelerated)
-    z: jax.Array  # (n,) acceleration sequence (= w when not accelerated)
+    w: jax.Array  # (n,) or (n, t) primal iterate
+    v: jax.Array  # acceleration sequence (= w when not accelerated)
+    z: jax.Array  # acceleration sequence (= w when not accelerated)
     key: jax.Array
     it: jax.Array  # iteration counter
-    sketch_res: jax.Array  # ||g_B|| of the last step (cheap progress proxy)
+    sketch_res: jax.Array  # ||G_B|| per head ((t,) or scalar) — progress proxy
 
 
 class StepAux(NamedTuple):
@@ -99,11 +103,17 @@ def resolve_accel_params(cfg: ASkotchConfig, n: int, lam: float) -> tuple[float,
 def make_step(
     problem: KRRProblem, cfg: ASkotchConfig, probs: jax.Array | None = None
 ) -> Callable[[SolverState], tuple[SolverState, StepAux]]:
-    """Build the jit-able Skotch/ASkotch step for a fixed problem."""
+    """Build the jit-able Skotch/ASkotch step for a fixed problem.
+
+    The step is shape-polymorphic in the RHS: with y (n, t) every per-block
+    quantity batches over the trailing head axis while the block sample, the
+    Nystrom preconditioner, and the fused kernel tiles are computed once.
+    """
     n = problem.n
     b = cfg.resolve_block(n)
     r = min(cfg.rank, b - 1)
     lam = jnp.float32(problem.lam)
+    op = dataclasses.replace(problem.op, backend=cfg.backend)
 
     if cfg.sampling == "arls":
         if probs is None:
@@ -119,7 +129,7 @@ def make_step(
         beta, gamma, alpha = _accel_params(mu, nu)
 
     x, y = problem.x, problem.y
-    kernel, sigma, backend = problem.kernel, problem.sigma, cfg.backend
+    head_axes = None if y.ndim == 1 else (0,)
 
     def step(state: SolverState) -> tuple[SolverState, StepAux]:
         key, kb, knys, kl = jax.random.split(state.key, 4)
@@ -129,8 +139,8 @@ def make_step(
         zref = state.z if cfg.accelerated else state.w
         zb = jnp.take(zref, idx, axis=0)
 
-        # -- block build + Nystrom preconditioner ---------------------------
-        kbb = ops.kernel_block(xb, xb, kernel=kernel, sigma=sigma, backend=backend)
+        # -- block build + Nystrom preconditioner (shared across heads) -----
+        kbb = op.block(xb)
 
         omega = jax.random.normal(knys, (b, r), dtype=kbb.dtype)
         omega, _ = jnp.linalg.qr(omega)
@@ -164,15 +174,12 @@ def make_step(
 
         eta = 1.0 / jnp.maximum(step_l, 1.0)  # eta = 1 / hat-L_PB (Lemma 8)
 
-        # -- fused O(nb) kernel matvec: g_B = (K_lam)_{B,:} z - y_B ---------
-        gb = (
-            ops.kernel_matvec(xb, x, zref, kernel=kernel, sigma=sigma, backend=backend)
-            + lam * zb
-            - yb
-        )
+        # -- fused O(nbt) kernel matvec: G_B = (K_lam)_{B,:} Z - Y_B --------
+        # one kernel-tile pass serves all t heads
+        gb = op.row_block_matvec(xb, zref) + lam * zb - yb
         db = solve_g(gb)
 
-        # -- iterate updates -------------------------------------------------
+        # -- iterate updates (batched over the head axis) --------------------
         if cfg.accelerated:
             w_new = state.z.at[idx].add(-eta * db)
             v_new = (beta * state.v + (1.0 - beta) * state.z).at[idx].add(
@@ -190,7 +197,7 @@ def make_step(
             z=z_new,
             key=key,
             it=state.it + 1,
-            sketch_res=jnp.linalg.norm(gb),
+            sketch_res=jnp.linalg.norm(gb, axis=head_axes),
         )
         return new_state, StepAux(step_l=step_l, rho=rho)
 
@@ -198,16 +205,18 @@ def make_step(
 
 
 def init_state(problem: KRRProblem, seed: int = 0, w0: jax.Array | None = None) -> SolverState:
-    n = problem.n
+    """Zero-initialized state; iterates take the shape of problem.y
+    ((n,) or (n, t)) so multi-head solves carry one column per head."""
     if w0 is None:
-        w0 = jnp.zeros((n,), jnp.float32)
+        w0 = jnp.zeros(problem.y.shape, jnp.float32)
+    res0 = jnp.full(() if problem.y.ndim == 1 else (problem.t,), jnp.inf, jnp.float32)
     return SolverState(
         w=w0,
         v=w0,
         z=w0,
         key=jax.random.PRNGKey(seed),
         it=jnp.zeros((), jnp.int32),
-        sketch_res=jnp.array(jnp.inf, jnp.float32),
+        sketch_res=res0,
     )
 
 
@@ -225,11 +234,8 @@ def _maybe_arls_probs(problem: KRRProblem, cfg: ASkotchConfig, seed: int):
         return None
     scores = samplers.approx_rls_bless(
         jax.random.PRNGKey(seed + 1),
-        problem.x,
-        kernel=problem.kernel,
-        sigma=problem.sigma,
+        dataclasses.replace(problem.op, backend=cfg.backend),
         lam=problem.lam,
-        backend=cfg.backend,
     )
     return samplers.arls_probs(scores)
 
@@ -248,8 +254,10 @@ def solve(
 ) -> SolveResult:
     """Python-loop driver: jitted steps + periodic full-residual evaluation.
 
-    The full relative residual costs one O(n^2 d) streamed matvec, so it is
-    only computed every ``eval_every`` iterations (and at the end).
+    The full relative residual costs one O(n^2 d) streamed matvec (shared by
+    the per-head and aggregate reports), so it is only computed every
+    ``eval_every`` iterations (and at the end).  History records carry
+    ``rel_residual`` (aggregate over heads) and ``rel_residual_per_head``.
     """
     cfg = cfg or ASkotchConfig()
     probs = _maybe_arls_probs(problem, cfg, seed)
@@ -262,18 +270,23 @@ def solve(
     for it in range(1, max_iters + 1):
         state, aux = step(state)
         if it % eval_every == 0 or it == max_iters:
-            rel = float(problem.relative_residual(state.w))
+            rel_agg, rel_heads = problem.residual_report(state.w)
+            rel = float(rel_agg)
             rec = {
                 "iter": it,
                 "rel_residual": rel,
-                "sketch_res": float(state.sketch_res),
+                "rel_residual_per_head": [float(v) for v in rel_heads],
+                "sketch_res": float(jnp.linalg.norm(state.sketch_res)),
                 "step_L": float(aux.step_l),
                 "time_s": time.perf_counter() - t0,
             }
             history.append(rec)
             if callback:
                 callback(it, state, rec)
-            if rel < tol:
+            # every head must pass (aggregate alone dilutes a bad head by
+            # ~1/sqrt(t)); identical to the aggregate test when t = 1, and
+            # the same convergence meaning as blocked_cg
+            if bool(jnp.all(rel_heads < tol)):
                 converged = True
                 break
         if time_budget_s is not None and time.perf_counter() - t0 > time_budget_s:
@@ -296,7 +309,7 @@ def solve_scan(
     w0: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Pure lax.scan solve (benchmarks / dry-run lowering): returns (w, per-
-    iteration sketched residuals)."""
+    iteration sketched residuals — (iters,) or (iters, t))."""
     cfg = cfg or ASkotchConfig()
     probs = _maybe_arls_probs(problem, cfg, seed)
     step = make_step(problem, cfg, probs)

@@ -1,7 +1,9 @@
-"""Direct Cholesky solve of (K + lam I) w = y — O(n^3)/O(n^2).
+"""Direct Cholesky solve of (K + lam I) W = Y — O(n^3)/O(n^2).
 
 Ground truth for tests and the small-n end of the baselines (paper §1 notes
 it stops being viable at n >~ 1e4, which our scaling benchmark reproduces).
+Multi-RHS for free: one factorization back-substitutes all t columns of a
+(n, t) Y (the one-vs-all case), a (n,) y returns a (n,) w.
 """
 
 from __future__ import annotations
@@ -10,17 +12,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.krr import KRRProblem
-from repro.kernels import ops
 
 
 def solve_direct(problem: KRRProblem) -> jax.Array:
-    k = ops.kernel_block(
-        problem.x,
-        problem.x,
-        kernel=problem.kernel,
-        sigma=problem.sigma,
-        backend=problem.backend,
-    )
+    k = problem.op.block(problem.x)
     k_lam = k + problem.lam * jnp.eye(problem.n, dtype=k.dtype)
     chol = jnp.linalg.cholesky(k_lam)
     return jax.scipy.linalg.cho_solve((chol, True), problem.y)

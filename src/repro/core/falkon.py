@@ -1,14 +1,16 @@
 """Falkon (Rudi et al. 2017; Meanti et al. 2020): inducing-points KRR baseline.
 
-Solves Eq. (5):  (K_nm^T K_nm + lam K_mm) w = K_nm^T y  with m uniformly
-sampled centers, via CG in the Falkon-preconditioned variable
-w = L^{-T} R^{-T} beta where
+Solves Eq. (5):  (K_nm^T K_nm + lam K_mm) W = K_nm^T Y  with m uniformly
+sampled centers, via blocked CG in the Falkon-preconditioned variable
+W = L^{-T} R^{-T} beta where
 
   L = chol(K_mm),   R = chol((1/m) L^T L + lam I).
 
-All K_nm products are streamed through the fused kernel ops (O(n m d) per CG
-iteration, O(m^2) storage) — the same structural costs as the reference
-implementation, and the same m^2-storage wall the paper documents.
+All K_nm products go through the center/train KernelOperators (O(n m d) per
+CG iteration, O(m^2) storage) — the same structural costs as the reference
+implementation, and the same m^2-storage wall the paper documents.  A (n, t)
+Y runs one CG over t columns sharing every streamed kernel pass; a 1-D y is
+the t = 1 special case.
 """
 
 from __future__ import annotations
@@ -20,13 +22,14 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.linalg import solve_triangular
 
+from repro.core.blocked_cg import blocked_cg
 from repro.core.krr import KRRProblem
-from repro.kernels import ops
+from repro.core.operator import as_multirhs, maybe_squeeze
 
 
 @dataclasses.dataclass
 class FalkonResult:
-    w: jax.Array  # (m,) inducing-point weights
+    w: jax.Array  # (m,) or (m, t) inducing-point weights
     centers_idx: jax.Array  # (m,) indices into the training set
     iters: int
     history: list[dict]
@@ -47,27 +50,20 @@ def solve_falkon(
     n = problem.n
     key = jax.random.PRNGKey(seed)
     centers_idx = jax.random.choice(key, n, (m,), replace=False)
-    xm = jnp.take(problem.x, centers_idx, axis=0)
+    op = problem.op
+    op_m = op.restrict(centers_idx)  # operator over the center rows
     lam = jnp.float32(problem.lam)
 
-    kmm = ops.kernel_block(
-        xm, xm, kernel=problem.kernel, sigma=problem.sigma, backend=problem.backend
-    )
+    kmm = op_m.block(op_m.x)
     kmm = kmm + jitter * m * jnp.eye(m, dtype=kmm.dtype)
     l = jnp.linalg.cholesky(kmm)
     inner = (l.T @ l) / m + lam * jnp.eye(m, dtype=kmm.dtype)
     r = jnp.linalg.cholesky(inner)
 
     def knm_t_knm(v: jax.Array) -> jax.Array:
-        """K_nm^T (K_nm v) streamed over n."""
-        tmp = ops.kernel_matvec(
-            problem.x, xm, v, kernel=problem.kernel, sigma=problem.sigma,
-            backend=problem.backend,
-        )
-        return ops.kernel_matvec(
-            xm, problem.x, tmp, kernel=problem.kernel, sigma=problem.sigma,
-            backend=problem.backend,
-        )
+        """K_nm^T (K_nm v) streamed over n; v (m, t)."""
+        tmp = op_m.row_block_matvec(op.x, v)  # K(x, xm) @ v
+        return op.row_block_matvec(op_m.x, tmp)  # K(xm, x) @ tmp
 
     def from_beta(beta: jax.Array) -> jax.Array:
         return solve_triangular(l.T, solve_triangular(r.T, beta, lower=False), lower=False)
@@ -82,47 +78,24 @@ def solve_falkon(
             r, solve_triangular(r.T, beta, lower=False), lower=True
         )
 
-    rhs = to_precond(
-        ops.kernel_matvec(
-            xm, problem.x, problem.y, kernel=problem.kernel, sigma=problem.sigma,
-            backend=problem.backend,
-        )
+    y, squeeze = as_multirhs(problem.y)
+    rhs = to_precond(op.row_block_matvec(op_m.x, y))  # (m, t)
+
+    # plain blocked CG on the Falkon-preconditioned operator (pinv = None)
+    res = blocked_cg(
+        operator, rhs, max_iters=max_iters, tol=tol, t0=t0,
+        time_budget_s=time_budget_s,
     )
 
-    beta = jnp.zeros((m,), jnp.float32)
-    resid = rhs
-    p = resid
-    rs = jnp.vdot(resid, resid)
-    rhs_norm = float(jnp.linalg.norm(rhs))
-    history: list[dict] = []
-    it = 0
-    for it in range(1, max_iters + 1):
-        hp = operator(p)
-        alpha = rs / jnp.vdot(p, hp)
-        beta = beta + alpha * p
-        resid = resid - alpha * hp
-        rel = float(jnp.linalg.norm(resid)) / max(rhs_norm, 1e-30)
-        history.append({"iter": it, "rel_residual": rel, "time_s": time.perf_counter() - t0})
-        if rel < tol:
-            break
-        rs_new = jnp.vdot(resid, resid)
-        p = resid + (rs_new / rs) * p
-        rs = rs_new
-        if time_budget_s is not None and time.perf_counter() - t0 > time_budget_s:
-            break
-
     return FalkonResult(
-        w=from_beta(beta),
+        w=maybe_squeeze(from_beta(res.x), squeeze),
         centers_idx=centers_idx,
-        iters=it,
-        history=history,
+        iters=res.iters,
+        history=res.history,
         wall_time_s=time.perf_counter() - t0,
     )
 
 
 def falkon_predict(problem: KRRProblem, result: FalkonResult, x_test: jax.Array) -> jax.Array:
-    xm = jnp.take(problem.x, result.centers_idx, axis=0)
-    return ops.kernel_matvec(
-        x_test, xm, result.w, kernel=problem.kernel, sigma=problem.sigma,
-        backend=problem.backend,
-    )
+    op_m = problem.op.restrict(result.centers_idx)
+    return op_m.row_block_matvec(x_test, result.w)

@@ -1,8 +1,10 @@
 """Full-KRR problem container, prediction, and metrics (paper Eqs. (2)-(3)).
 
-The problem is the linear system (K + lam I) w = y with lam = n * lam_unscaled
-(the paper scales regularization by n, App. C.2.1).  K is only ever accessed
-through the fused streaming kernel ops.
+The problem is the linear system (K + lam I) W = Y with lam = n * lam_unscaled
+(the paper scales regularization by n, App. C.2.1).  Y may be (n,) — scalar
+regression / binary ±1 — or (n, t) with t one-vs-all heads; every solver in
+the stack handles both, and all kernel access goes through a single
+:class:`~repro.core.operator.KernelOperator`.
 """
 
 from __future__ import annotations
@@ -13,7 +15,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops
+from repro.core.operator import KernelOperator, as_multirhs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,40 +32,85 @@ class KRRProblem:
         return self.x.shape[0]
 
     @property
+    def t(self) -> int:
+        """Number of right-hand sides (1 for a scalar-target problem)."""
+        return 1 if self.y.ndim == 1 else self.y.shape[1]
+
+    @property
     def lam(self) -> float:
         return self.n * self.lam_unscaled
 
+    @property
+    def op(self) -> KernelOperator:
+        """The kernel operator owning (kernel, sigma, backend) plumbing."""
+        return KernelOperator(
+            x=self.x, kernel=self.kernel, sigma=self.sigma, backend=self.backend
+        )
+
     def matvec(self, v: jax.Array) -> jax.Array:
         """K @ v (streamed, O(n^2 d) — baselines/metrics only)."""
-        return ops.kernel_matvec(
-            self.x, self.x, v, kernel=self.kernel, sigma=self.sigma, backend=self.backend
-        )
+        return self.op.matvec(v)
 
     def k_lam_matvec(self, v: jax.Array) -> jax.Array:
         """(K + lam I) @ v."""
-        return self.matvec(v) + self.lam * v
+        return self.op.k_lam_matvec(v, self.lam)
+
+    def residual_per_head(self, w: jax.Array) -> jax.Array:
+        """||K_lam w_j - y_j|| / ||y_j|| per head — (t,) even when t = 1."""
+        return self.residual_report(w)[1]
 
     def relative_residual(self, w: jax.Array) -> jax.Array:
-        """||K_lam w - y|| / ||y||  (paper §6.3)."""
-        r = self.k_lam_matvec(w) - self.y
-        return jnp.linalg.norm(r) / jnp.linalg.norm(self.y)
+        """||K_lam W - Y||_F / ||Y||_F  (paper §6.3; aggregate over heads)."""
+        return self.residual_report(w)[0]
+
+    def residual_report(self, w: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """(aggregate, per-head) relative residuals from ONE streamed matvec.
+
+        Solvers record both every eval; sharing the O(n^2 d) pass matters.
+        """
+        w2, _ = as_multirhs(w)
+        y2, _ = as_multirhs(self.y)
+        r = self.op.k_lam_matvec(w2, self.lam) - y2
+        ynorm = jnp.maximum(jnp.linalg.norm(y2, axis=0), jnp.finfo(y2.dtype).tiny)
+        per_head = jnp.linalg.norm(r, axis=0) / ynorm
+        return jnp.linalg.norm(r) / jnp.linalg.norm(y2), per_head
 
     def predict(self, w: jax.Array, x_test: jax.Array) -> jax.Array:
-        """f(x) = K(x_test, X_train) @ w."""
-        return ops.kernel_matvec(
-            x_test, self.x, w, kernel=self.kernel, sigma=self.sigma, backend=self.backend
-        )
+        """f(x) = K(x_test, X_train) @ w; w (n,) -> (m,), w (n, t) -> (m, t)."""
+        return self.op.row_block_matvec(x_test, w)
 
 
 class Metrics(NamedTuple):
     rmse: jax.Array
     mae: jax.Array
-    accuracy: jax.Array  # sign-agreement (binary ±1 tasks); NaN-free for regression too
+    accuracy: jax.Array  # sign agreement (±1 tasks) / top-1 over one-vs-all heads
 
 
 def evaluate(y_pred: jax.Array, y_true: jax.Array) -> Metrics:
+    """RMSE/MAE over all entries; accuracy is sign agreement for scalar or
+    single-head targets and argmax (top-1 one-vs-all decoding) when t > 1."""
     err = y_pred - y_true
     rmse = jnp.sqrt(jnp.mean(err**2))
     mae = jnp.mean(jnp.abs(err))
-    acc = jnp.mean((jnp.sign(y_pred) == jnp.sign(y_true)).astype(jnp.float32))
+    if y_pred.ndim == 2 and y_pred.shape[1] > 1:
+        acc = jnp.mean(
+            (jnp.argmax(y_pred, axis=1) == jnp.argmax(y_true, axis=1)).astype(
+                jnp.float32
+            )
+        )
+    else:
+        acc = jnp.mean((jnp.sign(y_pred) == jnp.sign(y_true)).astype(jnp.float32))
     return Metrics(rmse=rmse, mae=mae, accuracy=acc)
+
+
+def evaluate_per_head(y_pred: jax.Array, y_true: jax.Array) -> Metrics:
+    """Per-head metrics — each field is (t,).  Accuracy is per-head sign
+    agreement (the one-vs-all margins are ±1-coded per head)."""
+    p2, _ = as_multirhs(y_pred)
+    t2, _ = as_multirhs(y_true)
+    err = p2 - t2
+    return Metrics(
+        rmse=jnp.sqrt(jnp.mean(err**2, axis=0)),
+        mae=jnp.mean(jnp.abs(err), axis=0),
+        accuracy=jnp.mean((jnp.sign(p2) == jnp.sign(t2)).astype(jnp.float32), axis=0),
+    )

@@ -67,10 +67,19 @@ def nystrom_from_sketch(
     return NystromFactors(u=u, lam=lam)
 
 
+def _scale_rows(m: jax.Array, coeff: jax.Array) -> jax.Array:
+    """diag(coeff) @ m for m of shape (r,) or (r, t)."""
+    return m * coeff[:, None] if m.ndim == 2 else m * coeff
+
+
 def woodbury_inv_apply(f: NystromFactors, rho: jax.Array, g: jax.Array) -> jax.Array:
-    """(U diag(lam) U^T + rho I)^{-1} g in O(pr)  (Eq. (15))."""
+    """(U diag(lam) U^T + rho I)^{-1} g in O(p r t)  (Eq. (15)).
+
+    g may be a single vector (p,) or a block of t right-hand sides (p, t);
+    the factor products are shared across columns either way.
+    """
     utg = f.u.T @ g
-    core = utg / (f.lam + rho)[..., None] if g.ndim == 2 else utg / (f.lam + rho)
+    core = _scale_rows(utg, 1.0 / (f.lam + rho))
     return f.u @ core + (g - f.u @ utg) / rho
 
 
@@ -89,7 +98,11 @@ def stable_inv_apply_setup(f: NystromFactors, rho: jax.Array) -> jax.Array:
 def stable_inv_apply(
     f: NystromFactors, rho: jax.Array, chol_l: jax.Array, g: jax.Array
 ) -> jax.Array:
-    """(K_hat + rho I)^{-1} g via the f32-stable Cholesky path (App. A.1.1)."""
+    """(K_hat + rho I)^{-1} g via the f32-stable Cholesky path (App. A.1.1).
+
+    Accepts g of shape (p,) or (p, t) — the triangular solves batch over
+    columns, so a t-head block costs one factorization plus O(p r t).
+    """
     utg = f.u.T @ g
     z = jax.scipy.linalg.solve_triangular(chol_l, utg, lower=True)
     z = jax.scipy.linalg.solve_triangular(chol_l.T, z, lower=False)
@@ -97,11 +110,10 @@ def stable_inv_apply(
 
 
 def woodbury_invsqrt_apply(f: NystromFactors, rho: jax.Array, v: jax.Array) -> jax.Array:
-    """(U diag(lam) U^T + rho I)^{-1/2} v in O(pr)  (Eq. (16))."""
+    """(U diag(lam) U^T + rho I)^{-1/2} v in O(p r t)  (Eq. (16)); v may be
+    (p,) or a (p, t) block (e.g. get_L block powering probes)."""
     utv = f.u.T @ v
-    core = utv / jnp.sqrt(f.lam + rho)[..., None] if v.ndim == 2 else utv / jnp.sqrt(
-        f.lam + rho
-    )
+    core = _scale_rows(utv, 1.0 / jnp.sqrt(f.lam + rho))
     return f.u @ core + (v - f.u @ utv) / jnp.sqrt(rho)
 
 

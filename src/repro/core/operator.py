@@ -1,0 +1,123 @@
+"""KernelOperator — the single owner of (kernel, sigma, backend, chunking).
+
+Every solver used to re-thread the ``(kernel, sigma, backend)`` triple into
+each ``ops.*`` call; this layer centralizes that plumbing (DESIGN.md §4).
+An operator is a frozen view over a row set ``x`` exposing the four
+primitives the whole stack is built from:
+
+  * ``matvec(v)``            — K(x, x) @ v, fused/streamed, never forms K.
+  * ``row_block_matvec(a, v)`` — K(a, x) @ v for an arbitrary row block
+                               ``a`` (ASkotch's O(n b d) hot spot, Falkon's
+                               K_nm products, prediction).
+  * ``block(a, b)``          — materialize a K(a, b) tile (small blocks only).
+  * ``trace_est()``          — tr K(x, x); exact (= n) for the unit-diagonal
+                               shift-invariant kernels in the testbed.
+
+Everything is multi-RHS by construction: ``v`` may be ``(n,)`` or ``(n, t)``
+and a single fused kernel-tile pass serves all ``t`` columns — this is what
+makes one-vs-all solves cost one kernel sweep per iteration instead of ``t``.
+
+``restrict(idx)`` / ``with_points(xm)`` derive operators over sub-row-sets
+(inducing centers, BLESS dictionaries, sampled blocks) without re-threading
+configuration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelOperator:
+    """Linear-operator view of K = K(x, x) for a fixed kernel configuration."""
+
+    x: jax.Array  # (n, d) row points
+    kernel: str = "rbf"
+    sigma: float = 1.0
+    backend: str = "auto"
+    chunk_a: int = 4096
+    chunk_b: int = 8192
+
+    @property
+    def n(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.x.shape[1]
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.n, self.n)
+
+    # -- derived operators --------------------------------------------------
+
+    def with_points(self, x_new: jax.Array) -> "KernelOperator":
+        """Same kernel configuration over a different row set."""
+        return dataclasses.replace(self, x=x_new)
+
+    def restrict(self, idx: jax.Array) -> "KernelOperator":
+        """Operator over the sub-row-set ``x[idx]`` (centers, dictionaries)."""
+        return self.with_points(jnp.take(self.x, idx, axis=0))
+
+    # -- the four primitives -------------------------------------------------
+
+    def matvec(self, v: jax.Array) -> jax.Array:
+        """K(x, x) @ v; v: (n,) or (n, t) -> same leading-dim shape."""
+        return self.row_block_matvec(self.x, v)
+
+    def row_block_matvec(self, a: jax.Array, v: jax.Array) -> jax.Array:
+        """K(a, x) @ v streamed over x; a: (b, d), v: (n,)|(n, t)."""
+        return ops.kernel_matvec(
+            a, self.x, v, kernel=self.kernel, sigma=self.sigma,
+            backend=self.backend, chunk_a=self.chunk_a, chunk_b=self.chunk_b,
+        )
+
+    def block(self, a: jax.Array, b: jax.Array | None = None) -> jax.Array:
+        """Materialize K(a, b) (b defaults to a).  Small/medium tiles only."""
+        b = a if b is None else b
+        return ops.kernel_block(
+            a, b, kernel=self.kernel, sigma=self.sigma, backend=self.backend
+        )
+
+    def block_idx(self, idx: jax.Array) -> jax.Array:
+        """K_BB for a row-index block (Skotch/ASkotch step)."""
+        xb = jnp.take(self.x, idx, axis=0)
+        return self.block(xb, xb)
+
+    def trace_est(self) -> jax.Array:
+        """tr K.  The testbed kernels (rbf/laplacian/matern52) all have
+        k(x, x) = 1, so the trace is exactly n."""
+        return jnp.float32(self.n)
+
+    # -- composites shared by several solvers --------------------------------
+
+    def k_lam_matvec(self, v: jax.Array, lam: jax.Array | float) -> jax.Array:
+        """(K + lam I) @ v."""
+        return self.matvec(v) + lam * v
+
+    def sketch(self, omega: jax.Array) -> jax.Array:
+        """K @ omega for a (n, r) test matrix — Nystrom sketches over the
+        full kernel without materializing it."""
+        return self.matvec(omega)
+
+
+def as_multirhs(v: jax.Array) -> tuple[jax.Array, bool]:
+    """Canonicalize a RHS/iterate to (n, t); returns (v2d, was_1d).
+
+    The whole solver stack runs blocked over (n, t) internally; a 1-D input
+    is the t = 1 special case and is squeezed back on the way out.
+    """
+    if v.ndim == 1:
+        return v[:, None], True
+    return v, False
+
+
+def maybe_squeeze(v: jax.Array, was_1d: bool) -> jax.Array:
+    """Undo :func:`as_multirhs` on outputs."""
+    return v[:, 0] if was_1d else v

@@ -7,9 +7,13 @@ Preconditioners:
   * "rpcholesky" — rank-r randomly-pivoted-Cholesky factor (Diaz et al. 2023).
   * "identity"   — plain CG.
 
-Per-iteration cost is the O(n^2 d) streamed K matvec — this is exactly the
-scaling wall the paper documents (Fig. 1: no PCG iteration finishes at
-n = 1e8), reproduced in benchmarks/bench_table2_scaling.py.
+The iteration is blocked CG over (n, t) right-hand sides (Diaz et al. 2023
+formulate randomized-preconditioned PCG over block RHS the same way): each
+column carries its own alpha/beta/residual, columns that hit ``tol`` are
+frozen, and the O(n^2 d) streamed K matvec — exactly the scaling wall the
+paper documents (Fig. 1: no PCG iteration finishes at n = 1e8, reproduced in
+benchmarks/bench_table2_scaling.py) — is shared by all t columns per
+iteration.  A 1-D y is the t = 1 special case.
 """
 
 from __future__ import annotations
@@ -21,10 +25,11 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core.blocked_cg import blocked_cg
 from repro.core.krr import KRRProblem
 from repro.core.nystrom import NystromFactors, nystrom_from_sketch
+from repro.core.operator import as_multirhs, maybe_squeeze
 from repro.core.rpcholesky import rp_cholesky
-from repro.kernels import ops
 
 
 @dataclasses.dataclass
@@ -37,19 +42,11 @@ class PCGResult:
 
 
 def _nystrom_full(problem: KRRProblem, rank: int, key: jax.Array) -> NystromFactors:
-    n = problem.n
-    omega = jax.random.normal(key, (n, rank), jnp.float32)
+    op = problem.op
+    omega = jax.random.normal(key, (op.n, rank), jnp.float32)
     omega, _ = jnp.linalg.qr(omega)
-    sketch = ops.kernel_matvec(
-        problem.x,
-        problem.x,
-        omega,
-        kernel=problem.kernel,
-        sigma=problem.sigma,
-        backend=problem.backend,
-    )
-    # trace of a unit-diagonal kernel matrix is exactly n
-    return nystrom_from_sketch(sketch, omega, jnp.float32(n))
+    sketch = op.sketch(omega)
+    return nystrom_from_sketch(sketch, omega, op.trace_est())
 
 
 def make_preconditioner(
@@ -59,32 +56,27 @@ def make_preconditioner(
     rho_mode: str = "damped",
     seed: int = 0,
 ) -> Callable[[jax.Array], jax.Array]:
-    """Returns P^{-1} apply.  For Nystrom-type preconditioners:
-    P^{-1} v = U diag((lam_r + lam)/(lam_j + lam)) U^T v + (v - U U^T v)."""
+    """Returns P^{-1} apply over a (n, t) residual block.  For Nystrom-type
+    preconditioners:
+    P^{-1} V = U diag((lam_r + rho)/(lam_j + rho)) U^T V + (V - U U^T V)."""
     lam = jnp.float32(problem.lam)
     if kind == "identity":
         return lambda v: v
     if kind == "nystrom":
         f = _nystrom_full(problem, rank, jax.random.PRNGKey(seed))
     elif kind == "rpcholesky":
-        fmat, _ = rp_cholesky(
-            jax.random.PRNGKey(seed),
-            problem.x,
-            rank,
-            kernel=problem.kernel,
-            sigma=problem.sigma,
-            backend=problem.backend,
-        )
+        fmat, _ = rp_cholesky(jax.random.PRNGKey(seed), problem.op, rank)
         u, s, _ = jnp.linalg.svd(fmat, full_matrices=False)
         f = NystromFactors(u=u, lam=s * s)
     else:
         raise ValueError(f"unknown preconditioner {kind!r}")
 
     rho = lam + f.lam[-1] if rho_mode == "damped" else lam
+    coeff = (f.lam[-1] + rho) / (f.lam + rho)
 
     def apply(v: jax.Array) -> jax.Array:
         utv = f.u.T @ v
-        scaled = utv * ((f.lam[-1] + rho) / (f.lam + rho))
+        scaled = utv * (coeff[:, None] if v.ndim == 2 else coeff)
         return f.u @ scaled + (v - f.u @ utv)
 
     return apply
@@ -101,38 +93,22 @@ def solve_pcg(
     seed: int = 0,
     time_budget_s: float | None = None,
 ) -> PCGResult:
+    """Blocked PCG on (K + lam I) W = Y with per-column residual tracking.
+
+    History records carry ``rel_residual`` (aggregate ||R||_F / ||Y||_F) and
+    ``rel_residual_per_head``; convergence requires every column below tol.
+    """
     t0 = time.perf_counter()
     pinv = make_preconditioner(problem, precond, rank, rho_mode, seed)
     matvec = jax.jit(problem.k_lam_matvec)
     pinv = jax.jit(pinv)
 
-    y = problem.y
-    w = jnp.zeros_like(y)
-    r = y  # residual for w0 = 0
-    z = pinv(r)
-    p = z
-    rz = jnp.vdot(r, z)
-    ynorm = float(jnp.linalg.norm(y))
-    history: list[dict] = []
-    converged = False
-    it = 0
-    for it in range(1, max_iters + 1):
-        kp = matvec(p)
-        alpha = rz / jnp.vdot(p, kp)
-        w = w + alpha * p
-        r = r - alpha * kp
-        rel = float(jnp.linalg.norm(r)) / ynorm
-        history.append({"iter": it, "rel_residual": rel, "time_s": time.perf_counter() - t0})
-        if rel < tol:
-            converged = True
-            break
-        z = pinv(r)
-        rz_new = jnp.vdot(r, z)
-        p = z + (rz_new / rz) * p
-        rz = rz_new
-        if time_budget_s is not None and time.perf_counter() - t0 > time_budget_s:
-            break
+    y, squeeze = as_multirhs(problem.y)
+    res = blocked_cg(
+        matvec, y, pinv, max_iters=max_iters, tol=tol, t0=t0,
+        time_budget_s=time_budget_s,
+    )
     return PCGResult(
-        w=w, iters=it, history=history, converged=converged,
-        wall_time_s=time.perf_counter() - t0,
+        w=maybe_squeeze(res.x, squeeze), iters=res.iters, history=res.history,
+        converged=res.converged, wall_time_s=time.perf_counter() - t0,
     )

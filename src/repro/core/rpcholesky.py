@@ -15,24 +15,22 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops
+from repro.core.operator import KernelOperator
 
 
 def rp_cholesky(
     key: jax.Array,
-    x: jax.Array,
+    op: KernelOperator,
     rank: int,
-    *,
-    kernel: str,
-    sigma: float,
-    backend: str = "auto",
 ) -> tuple[jax.Array, jax.Array]:
     """Returns (F, pivots): F (n, rank) with K ≈ F F^T.
 
-    Sequential pivoting (one pivot per round) — the kernels used here have
-    unit diagonal so diag(K) = 1 initially.
+    ``op`` owns the kernel configuration; sequential pivoting (one pivot per
+    round) — the kernels used here have unit diagonal so diag(K) = 1
+    initially.
     """
-    n = x.shape[0]
+    x = op.x
+    n = op.n
     diag = jnp.ones((n,), jnp.float32)
     f = jnp.zeros((n, rank), jnp.float32)
     pivots = jnp.zeros((rank,), jnp.int32)
@@ -43,7 +41,7 @@ def rp_cholesky(
         probs = probs / jnp.maximum(jnp.sum(probs), 1e-30)
         piv = jax.random.choice(k_key, n, (), p=probs)
         xp = jax.lax.dynamic_slice_in_dim(x, piv, 1, axis=0)
-        col = ops.kernel_block(x, xp, kernel=kernel, sigma=sigma, backend=backend)[:, 0]
+        col = op.block(x, xp)[:, 0]
         # subtract the projection onto the factors found so far
         col = col - f @ f[piv]
         denom = jnp.sqrt(jnp.maximum(col[piv], 1e-12))

@@ -17,7 +17,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops
+from repro.core.operator import KernelOperator
 
 Sampler = Callable[[jax.Array], jax.Array]
 
@@ -61,16 +61,16 @@ def exact_rls(k_mat: jax.Array, lam: jax.Array) -> jax.Array:
 
 def approx_rls_bless(
     key: jax.Array,
-    x: jax.Array,
+    op: KernelOperator,
     *,
-    kernel: str,
-    sigma: float,
     lam: jax.Array,
     k_cap: int | None = None,
     rounds: int = 4,
-    backend: str = "auto",
 ) -> jax.Array:
     """BLESS-style approximate ridge leverage scores for all n points.
+
+    ``op`` owns the kernel/sigma/backend configuration; dictionaries are
+    derived sub-operators (``op.restrict``), so no kernel plumbing leaks in.
 
     Multi-round coarse-to-fine estimation: round h uses regularization
     lam_h = lam_0 / 4^h (geometric descent to the target lam) and a
@@ -82,7 +82,7 @@ def approx_rls_bless(
         l_i(lam_h) ≈ (K_ii - k_iS (K_SS + s * lam_h * diag(q_S))^{-1} k_Si) / lam_h
     clipped to [0, 1].  Shift-invariant kernels here have K_ii = 1.
     """
-    n, _ = x.shape
+    n = op.n
     if k_cap is None:
         k_cap = max(16, int(math.sqrt(n)))
     k_cap = min(k_cap, n)
@@ -98,15 +98,15 @@ def approx_rls_bless(
         lam_h = lam0 * ratio**h if rounds > 1 else lam
         q = scores / jnp.sum(scores)
         idx = jax.random.choice(keys[h], n, (k_cap,), replace=False, p=q)
-        xs = x[idx]
+        xs = op.x[idx]
         q_s = q[idx] * k_cap  # inclusion-rate normalization
-        k_ss = ops.kernel_block(xs, xs, kernel=kernel, sigma=sigma, backend=backend)
+        k_ss = op.block(xs)
         reg = lam_h * jnp.diag(jnp.maximum(q_s, 1e-12))
         chol = jnp.linalg.cholesky(
             k_ss + reg + 1e-6 * jnp.eye(k_cap, dtype=k_ss.dtype)
         )
         # k_nS in chunks via the fused block op
-        k_ns = ops.kernel_block(x, xs, kernel=kernel, sigma=sigma, backend=backend)
+        k_ns = op.block(op.x, xs)
         sol = jax.scipy.linalg.cho_solve((chol, True), k_ns.T)  # (s, n)
         quad = jnp.sum(k_ns.T * sol, axis=0)
         scores = jnp.clip((1.0 - quad) / lam_h, 1e-12, 1.0)

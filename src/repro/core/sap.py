@@ -18,7 +18,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.krr import KRRProblem
-from repro.kernels import ops
 
 
 class SAPState(NamedTuple):
@@ -29,12 +28,10 @@ class SAPState(NamedTuple):
 
 
 def _block_residual(problem: KRRProblem, idx: jax.Array, w: jax.Array) -> jax.Array:
-    """(K_lam)_{B,:} w - y_B via the fused streaming op."""
+    """(K_lam)_{B,:} w - y_B via the fused streaming op (w: (n,) or (n, t))."""
     xb = jnp.take(problem.x, idx, axis=0)
     return (
-        ops.kernel_matvec(
-            xb, problem.x, w, kernel=problem.kernel, sigma=problem.sigma, backend=problem.backend
-        )
+        problem.op.row_block_matvec(xb, w)
         + problem.lam * jnp.take(w, idx, axis=0)
         - jnp.take(problem.y, idx, axis=0)
     )
@@ -48,10 +45,7 @@ def make_randomized_newton_step(problem: KRRProblem, b: int):
     def step(state: SAPState) -> SAPState:
         key, kb = jax.random.split(state.key)
         idx = jax.random.choice(kb, n, (b,), replace=False)
-        xb = jnp.take(problem.x, idx, axis=0)
-        kbb = ops.kernel_block(
-            xb, xb, kernel=problem.kernel, sigma=problem.sigma, backend=problem.backend
-        )
+        kbb = problem.op.block_idx(idx)
         g = _block_residual(problem, idx, state.w)
         d = jnp.linalg.solve(kbb + lam * jnp.eye(b, dtype=kbb.dtype), g)
         w = state.w.at[idx].add(-d)
@@ -71,10 +65,7 @@ def make_nsap_step(problem: KRRProblem, b: int, mu: float, nu: float):
     def step(state: SAPState) -> SAPState:
         key, kb = jax.random.split(state.key)
         idx = jax.random.choice(kb, n, (b,), replace=False)
-        xb = jnp.take(problem.x, idx, axis=0)
-        kbb = ops.kernel_block(
-            xb, xb, kernel=problem.kernel, sigma=problem.sigma, backend=problem.backend
-        )
+        kbb = problem.op.block_idx(idx)
         g = _block_residual(problem, idx, state.z)
         d = jnp.linalg.solve(kbb + lam * jnp.eye(b, dtype=kbb.dtype), g)
         w = state.z.at[idx].add(-d)
@@ -94,8 +85,10 @@ def make_kaczmarz_step(problem: KRRProblem):
         key, kb = jax.random.split(state.key)
         j = jax.random.randint(kb, (), 0, n)
         row = _klam_row(problem, j, lam)
-        resid = row @ state.w - problem.y[j]
-        w = state.w - (resid / jnp.sum(row * row)) * row
+        resid = row @ state.w - problem.y[j]  # scalar or (t,)
+        coef = resid / jnp.sum(row * row)
+        upd = jnp.outer(row, coef) if state.w.ndim == 2 else coef * row
+        w = state.w - upd
         return SAPState(w=w, v=w, z=w, key=key)
 
     return step
@@ -119,19 +112,13 @@ def make_cd_step(problem: KRRProblem):
 
 def _klam_row(problem: KRRProblem, j: jax.Array, lam: jax.Array) -> jax.Array:
     xj = jax.lax.dynamic_slice_in_dim(problem.x, j, 1, axis=0)
-    row = ops.kernel_block(
-        xj, problem.x, kernel=problem.kernel, sigma=problem.sigma, backend=problem.backend
-    )[0]
+    row = problem.op.block(xj, problem.x)[0]
     return row.at[j].add(lam)
 
 
 def run(problem: KRRProblem, step, num_iters: int, seed: int = 0) -> jax.Array:
-    state = SAPState(
-        w=jnp.zeros((problem.n,), jnp.float32),
-        v=jnp.zeros((problem.n,), jnp.float32),
-        z=jnp.zeros((problem.n,), jnp.float32),
-        key=jax.random.PRNGKey(seed),
-    )
+    w0 = jnp.zeros(problem.y.shape, jnp.float32)
+    state = SAPState(w=w0, v=w0, z=w0, key=jax.random.PRNGKey(seed))
     step = jax.jit(step)
     for _ in range(num_iters):
         state = step(state)

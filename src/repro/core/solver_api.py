@@ -1,6 +1,12 @@
 """Unified solver entry point — one `solve()` for every method the paper
 benchmarks (ASkotch / Skotch / PCG variants / Falkon / EigenPro / direct),
 so the benchmark harness and examples treat them interchangeably.
+
+Every method is multi-RHS: a (n, t) problem.y (one-vs-all heads) yields a
+(n, t) (or (m, t) for Falkon) weight matrix, per-head convergence in the
+history records (``rel_residual_per_head``), and a predict_fn returning
+(n_test, t) scores.  Unknown keyword options fail fast with the accepted
+option list for the method instead of leaking into a bare TypeError.
 """
 
 from __future__ import annotations
@@ -24,6 +30,33 @@ METHODS = (
     "direct",
 )
 
+_ASKOTCH_CFG_KEYS = (
+    "block_size", "rank", "rho_mode", "sampling", "precond",
+    "mu", "nu", "stable_inv", "backend", "powering_iters",
+)
+_ASKOTCH_SOLVE_KEYS = (
+    "max_iters", "tol", "eval_every", "seed", "time_budget_s", "callback", "w0",
+)
+_PCG_KEYS = ("rank", "rho_mode", "max_iters", "tol", "seed", "time_budget_s")
+_FALKON_KEYS = ("m", "max_iters", "tol", "seed", "jitter", "time_budget_s")
+_EIGENPRO_KEYS = (
+    "rank", "subsample", "batch_size", "lr_scale", "epochs", "seed",
+    "eval_every", "time_budget_s",
+)
+
+#: accepted keyword options per method (satellite of the solve() contract —
+#: anything else raises ValueError instead of leaking into a TypeError)
+METHOD_OPTIONS: dict[str, tuple[str, ...]] = {
+    "askotch": _ASKOTCH_CFG_KEYS + _ASKOTCH_SOLVE_KEYS,
+    "skotch": _ASKOTCH_CFG_KEYS + _ASKOTCH_SOLVE_KEYS,
+    "pcg-nystrom": _PCG_KEYS,
+    "pcg-rpcholesky": _PCG_KEYS,
+    "cg": _PCG_KEYS,
+    "falkon": _FALKON_KEYS,
+    "eigenpro": _EIGENPRO_KEYS,
+    "direct": (),
+}
+
 
 @dataclasses.dataclass
 class SolveOutput:
@@ -31,26 +64,40 @@ class SolveOutput:
     w: jax.Array
     history: list[dict]
     info: dict[str, Any]
-    predict_fn: Any  # (x_test) -> predictions
+    predict_fn: Any  # (x_test) -> predictions ((m,) or (m, t))
+
+
+def _validate_options(method: str, kw: dict) -> None:
+    accepted = METHOD_OPTIONS[method]
+    unknown = sorted(set(kw) - set(accepted))
+    if unknown:
+        raise ValueError(
+            f"unknown option(s) {unknown} for method {method!r}; "
+            f"accepted: {sorted(accepted) or '(none)'}"
+        )
+
+
+def _head_info(problem: KRRProblem, history: list[dict]) -> dict[str, Any]:
+    info: dict[str, Any] = {"t": problem.t}
+    if history and "rel_residual_per_head" in history[-1]:
+        info["rel_residual_per_head"] = history[-1]["rel_residual_per_head"]
+    return info
 
 
 def solve(problem: KRRProblem, method: str = "askotch", **kw) -> SolveOutput:
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}; available: {METHODS}")
+    _validate_options(method, kw)
     if method in ("askotch", "skotch"):
-        cfg_kw = {
-            k: kw.pop(k)
-            for k in (
-                "block_size", "rank", "rho_mode", "sampling", "precond",
-                "mu", "nu", "stable_inv", "backend", "powering_iters",
-            )
-            if k in kw
-        }
+        cfg_kw = {k: kw.pop(k) for k in _ASKOTCH_CFG_KEYS if k in kw}
         cfg = askotch.ASkotchConfig(accelerated=(method == "askotch"), **cfg_kw)
         res = askotch.solve(problem, cfg, **kw)
         return SolveOutput(
             method=method,
             w=res.w,
             history=res.history,
-            info={"iters": res.iters, "converged": res.converged, "wall_time_s": res.wall_time_s},
+            info={"iters": res.iters, "converged": res.converged,
+                  "wall_time_s": res.wall_time_s, **_head_info(problem, res.history)},
             predict_fn=lambda xt: problem.predict(res.w, xt),
         )
     if method in ("pcg-nystrom", "pcg-rpcholesky", "cg"):
@@ -60,7 +107,8 @@ def solve(problem: KRRProblem, method: str = "askotch", **kw) -> SolveOutput:
             method=method,
             w=res.w,
             history=res.history,
-            info={"iters": res.iters, "converged": res.converged, "wall_time_s": res.wall_time_s},
+            info={"iters": res.iters, "converged": res.converged,
+                  "wall_time_s": res.wall_time_s, **_head_info(problem, res.history)},
             predict_fn=lambda xt: problem.predict(res.w, xt),
         )
     if method == "falkon":
@@ -69,7 +117,8 @@ def solve(problem: KRRProblem, method: str = "askotch", **kw) -> SolveOutput:
             method=method,
             w=res.w,
             history=res.history,
-            info={"iters": res.iters, "wall_time_s": res.wall_time_s, "m": res.w.shape[0]},
+            info={"iters": res.iters, "wall_time_s": res.wall_time_s,
+                  "m": res.w.shape[0], **_head_info(problem, res.history)},
             predict_fn=lambda xt: falkon.falkon_predict(problem, res, xt),
         )
     if method == "eigenpro":
@@ -78,16 +127,16 @@ def solve(problem: KRRProblem, method: str = "askotch", **kw) -> SolveOutput:
             method=method,
             w=res.w,
             history=res.history,
-            info={"iters": res.iters, "wall_time_s": res.wall_time_s},
+            info={"iters": res.iters, "wall_time_s": res.wall_time_s,
+                  **_head_info(problem, res.history)},
             predict_fn=lambda xt: problem.predict(res.w, xt),
         )
-    if method == "direct":
-        w = direct.solve_direct(problem)
-        return SolveOutput(
-            method=method,
-            w=w,
-            history=[],
-            info={},
-            predict_fn=lambda xt: problem.predict(w, xt),
-        )
-    raise ValueError(f"unknown method {method!r}; available: {METHODS}")
+    # direct
+    w = direct.solve_direct(problem)
+    return SolveOutput(
+        method=method,
+        w=w,
+        history=[],
+        info=_head_info(problem, []),
+        predict_fn=lambda xt: problem.predict(w, xt),
+    )

@@ -107,6 +107,26 @@ def krr_classification(seed: int, n: int, d: int, n_test: int = 0):
     return x_tr, jnp.sign(y_tr), x_te, jnp.sign(y_te)
 
 
+def krr_one_vs_all(seed: int, n: int, d: int, num_classes: int = 4, n_test: int = 0):
+    """Multi-class blobs encoded as (n, t) one-vs-all ±1 targets.
+
+    Returns (x_tr, y_tr, labels_tr, x_te, y_te, labels_te): y is the ±1
+    one-hot margin matrix the multi-RHS solvers consume (one column = one
+    head), labels are the integer classes for top-1 evaluation.
+    """
+    rng = np.random.default_rng(seed)
+    m = n + n_test
+    centers = rng.standard_normal((num_classes, d)).astype(np.float32) * 1.5
+    labels = rng.integers(0, num_classes, size=m)
+    x = centers[labels] + 0.6 * rng.standard_normal((m, d)).astype(np.float32)
+    y = -np.ones((m, num_classes), np.float32)
+    y[np.arange(m), labels] = 1.0
+    return (
+        jnp.asarray(x[:n]), jnp.asarray(y[:n]), jnp.asarray(labels[:n].astype(np.int32)),
+        jnp.asarray(x[n:]), jnp.asarray(y[n:]), jnp.asarray(labels[n:].astype(np.int32)),
+    )
+
+
 def taxi_like(seed: int, n: int, d: int = 9):
     """Low-dimensional trip-feature blobs with heavy-tailed targets
     (taxi ride-duration flavor, §6.2)."""

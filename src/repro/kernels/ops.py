@@ -7,7 +7,13 @@ Backends:
   "auto"      — "pallas" if a TPU is present else "xla".
 
 All entry points share the contract: never materialize K(a, b) beyond one
-(block) tile, accumulate in f32.
+(block) tile, accumulate in f32, and accept multi-RHS value matrices — a
+``(n, t)`` v rides the same kernel tiles as a ``(n,)`` v, which is what makes
+one-vs-all (t-head) solves cost one kernel sweep instead of t.
+
+Solvers should not call these directly; they go through
+``repro.core.operator.KernelOperator``, which owns the (kernel, sigma,
+backend, chunking) configuration.
 """
 
 from __future__ import annotations
@@ -20,7 +26,8 @@ from repro.kernels.kernel_block import kernel_block_pallas
 from repro.kernels.kernel_matvec import kernel_matvec_pallas
 
 
-def _resolve(backend: str) -> str:
+def resolve_backend(backend: str) -> str:
+    """Resolve "auto" to the concrete backend for this process."""
     if backend != "auto":
         return backend
     return "pallas" if jax.default_backend() == "tpu" else "xla"
@@ -37,8 +44,11 @@ def kernel_matvec(
     chunk_a: int = 4096,
     chunk_b: int = 8192,
 ) -> jax.Array:
-    """out = K(a, b) @ v without materializing K."""
-    backend = _resolve(backend)
+    """out = K(a, b) @ v without materializing K.
+
+    v: (n,) -> (m,) or (n, t) -> (m, t); all t columns share the kernel tiles.
+    """
+    backend = resolve_backend(backend)
     if backend == "xla":
         return ref.kernel_matvec(
             a, b, v, jnp.float32(sigma), kernel=kernel, chunk_a=chunk_a, chunk_b=chunk_b
@@ -57,7 +67,7 @@ def kernel_block(
     backend: str = "auto",
 ) -> jax.Array:
     """Materialize K(a, b) (use for small/medium blocks only)."""
-    backend = _resolve(backend)
+    backend = resolve_backend(backend)
     if backend == "xla":
         return ref.kernel_block(a, b, jnp.float32(sigma), kernel=kernel)
     return kernel_block_pallas(

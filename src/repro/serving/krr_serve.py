@@ -1,0 +1,52 @@
+"""Batched KRR prediction serving.
+
+Standalone module (no dependency on the LM model stack): wraps a trained
+weight matrix behind a KernelOperator so solved KRR models can serve request
+traffic.  Requests are padded to power-of-two buckets (bounded jit cache) and
+each bucket is one fused K(x_query, X_train) pass serving all t one-vs-all
+heads at once.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.operator import KernelOperator
+
+
+def make_krr_predict_fn(op: KernelOperator, w: jax.Array, *, max_batch: int = 4096):
+    """Batched KRR scorer: (q, d) queries -> (q,) or (q, t) scores.
+
+    The returned closure pads each request up to the next power-of-two bucket
+    (>= 8, <= max_batch) so the jit cache stays O(log max_batch) deep under
+    arbitrary traffic shapes; oversize requests stream in max_batch chunks.
+    One fused kernel pass serves all heads of a (n, t) weight matrix.
+    """
+
+    @jax.jit
+    def _score(xq: jax.Array) -> jax.Array:
+        return op.row_block_matvec(xq, w)
+
+    def _bucket(q: int) -> int:
+        b = 8
+        while b < q:
+            b <<= 1
+        return min(b, max_batch)
+
+    def predict(xq: jax.Array) -> jax.Array:
+        q = xq.shape[0]
+        if q == 0:  # empty request: (0,) / (0, t) without tracing a bucket
+            return jnp.zeros((0,) + w.shape[1:], jnp.float32)
+        outs = []
+        start = 0
+        while start < q:
+            stop = min(start + max_batch, q)
+            chunk = xq[start:stop]
+            b = _bucket(stop - start)
+            padded = jnp.pad(chunk, ((0, b - chunk.shape[0]),) + ((0, 0),) * (xq.ndim - 1))
+            outs.append(_score(padded)[: chunk.shape[0]])
+            start = stop
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+
+    return predict

@@ -1,9 +1,14 @@
-"""Serving steps: prefill + batched single-token decode.
+"""Serving steps: prefill + batched single-token decode for the LM stack,
+plus the batched KRR prediction server for solved kernel models.
 
 ``make_serve_fns`` returns jit-ready (prefill, decode_step) closures over a
 config; the decode step donates the cache so the KV buffers update in place.
 ``greedy_generate`` is the simple batched driver used by the serving example
 and the smoke tests (temperature-0).
+
+The batched KRR prediction server lives in ``repro.serving.krr_serve`` (it
+has no dependency on the model stack); ``make_krr_predict_fn`` is re-exported
+here for convenience.
 """
 
 from __future__ import annotations
@@ -14,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.model_api import ArchConfig, get_model
+from repro.serving.krr_serve import make_krr_predict_fn  # noqa: F401  (re-export)
 
 
 def make_serve_fns(cfg: ArchConfig, jit: bool = True):

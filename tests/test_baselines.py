@@ -50,13 +50,13 @@ def test_preconditioning_beats_plain_cg(problem):
 
 
 def test_rpcholesky_factor_quality(problem):
-    from repro.kernels import ops
+    from repro.core.operator import KernelOperator
 
     n = 300
     x = problem.x[:n]
-    f, pivots = rp_cholesky(jax.random.PRNGKey(0), x, 60, kernel="rbf", sigma=1.5,
-                            backend="xla")
-    k = np.asarray(ops.kernel_block(x, x, kernel="rbf", sigma=1.5, backend="xla"))
+    op = KernelOperator(x=x, kernel="rbf", sigma=1.5, backend="xla")
+    f, pivots = rp_cholesky(jax.random.PRNGKey(0), op, 60)
+    k = np.asarray(op.block(x))
     approx = np.asarray(f) @ np.asarray(f).T
     # residual trace must shrink well below trace(K) = n
     assert np.trace(k - approx) < 0.5 * n

@@ -119,16 +119,14 @@ def test_bless_scores_correlate_with_exact(problem):
     k=O(sqrt n) dictionary resolves the scores well."""
     n = 400
     x = problem.x[:n]
-    from repro.kernels import ops
+    from repro.core.operator import KernelOperator
 
-    k = ops.kernel_block(x, x, kernel="rbf", sigma=2.0, backend="xla")
+    op = KernelOperator(x=x, kernel="rbf", sigma=2.0, backend="xla")
+    k = op.block(x)
     lam = jnp.float32(5.0)
     exact = np.asarray(samplers.exact_rls(k, lam))
     approx = np.asarray(
-        samplers.approx_rls_bless(
-            jax.random.PRNGKey(0), x, kernel="rbf", sigma=2.0, lam=lam,
-            k_cap=120, backend="xla",
-        )
+        samplers.approx_rls_bless(jax.random.PRNGKey(0), op, lam=lam, k_cap=120)
     )
     assert approx.shape == (n,)
     assert (approx > 0).all()

@@ -1,0 +1,256 @@
+"""Multi-RHS (one-vs-all) solves: per-column parity with independent
+single-RHS solves for askotch/pcg/direct, per-head residual reporting, the
+KernelOperator layer, and the one-vs-all classification round trip through
+solver_api.solve -> predict_fn -> evaluate."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import solver_api
+from repro.core.askotch import ASkotchConfig, solve
+from repro.core.direct import solve_direct
+from repro.core.get_l import get_l_dense
+from repro.core.krr import KRRProblem, evaluate, evaluate_per_head
+from repro.core.nystrom import (
+    nystrom,
+    stable_inv_apply,
+    stable_inv_apply_setup,
+    woodbury_inv_apply,
+    woodbury_invsqrt_apply,
+)
+from repro.core.operator import KernelOperator, as_multirhs, maybe_squeeze
+from repro.core.pcg import solve_pcg
+from repro.data import synthetic
+
+N, D, T = 500, 5, 3
+
+
+@pytest.fixture(scope="module")
+def problem():
+    """(n, t) problem with a known generating W so every column is solvable."""
+    r = np.random.default_rng(11)
+    x = jnp.asarray(r.standard_normal((N, D)).astype(np.float32))
+    base = KRRProblem(x=x, y=jnp.zeros(N), kernel="rbf", sigma=1.5,
+                      lam_unscaled=1e-3, backend="xla")
+    w_true = jnp.asarray(r.standard_normal((N, T)).astype(np.float32))
+    y = base.op.k_lam_matvec(w_true, base.lam)
+    return KRRProblem(x=x, y=y, kernel="rbf", sigma=1.5, lam_unscaled=1e-3,
+                      backend="xla")
+
+
+def _column_problem(problem, j):
+    return KRRProblem(x=problem.x, y=problem.y[:, j], kernel=problem.kernel,
+                      sigma=problem.sigma, lam_unscaled=problem.lam_unscaled,
+                      backend=problem.backend)
+
+
+# ---------------------------------------------------------------------------
+# KernelOperator
+# ---------------------------------------------------------------------------
+
+
+def test_operator_matvec_multirhs(problem):
+    op = problem.op
+    k = np.asarray(op.block(problem.x))
+    v = np.asarray(problem.y)
+    np.testing.assert_allclose(np.asarray(op.matvec(problem.y)), k @ v,
+                               rtol=2e-4, atol=2e-4)
+    # 1-D column == column of the 2-D result
+    col = np.asarray(op.matvec(problem.y[:, 0]))
+    np.testing.assert_allclose(col, (k @ v)[:, 0], rtol=2e-4, atol=2e-4)
+
+
+def test_operator_restrict_and_trace(problem):
+    op = problem.op
+    idx = jnp.arange(50)
+    sub = op.restrict(idx)
+    assert sub.n == 50 and sub.kernel == op.kernel
+    np.testing.assert_allclose(np.asarray(sub.block(sub.x)),
+                               np.asarray(op.block(problem.x[:50])), atol=1e-6)
+    assert float(op.trace_est()) == problem.n  # unit-diagonal kernels
+
+
+def test_as_multirhs_roundtrip():
+    v = jnp.ones((7,))
+    v2, squeeze = as_multirhs(v)
+    assert v2.shape == (7, 1) and squeeze
+    assert maybe_squeeze(v2, squeeze).shape == (7,)
+    m = jnp.ones((7, 3))
+    m2, squeeze = as_multirhs(m)
+    assert m2.shape == (7, 3) and not squeeze
+
+
+# ---------------------------------------------------------------------------
+# Woodbury / get_L multi-RHS blocks
+# ---------------------------------------------------------------------------
+
+
+def test_woodbury_applies_batch_over_columns():
+    # local generator: draining the shared session `rng` fixture here would
+    # shift the stream for every later test in the session
+    rng = np.random.default_rng(7)
+    p, r, t = 64, 16, 5
+    f = rng.standard_normal((p, 24)).astype(np.float32)
+    fac = nystrom(jax.random.PRNGKey(1), jnp.asarray(f @ f.T / 24), r)
+    rho = jnp.float32(0.3)
+    g = jnp.asarray(rng.standard_normal((p, t)).astype(np.float32))
+    batched = np.asarray(woodbury_inv_apply(fac, rho, g))
+    chol = stable_inv_apply_setup(fac, rho)
+    batched_s = np.asarray(stable_inv_apply(fac, rho, chol, g))
+    batched_h = np.asarray(woodbury_invsqrt_apply(fac, rho, g))
+    for j in range(t):
+        np.testing.assert_allclose(
+            np.asarray(woodbury_inv_apply(fac, rho, g[:, j])), batched[:, j],
+            rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(stable_inv_apply(fac, rho, chol, g[:, j])), batched_s[:, j],
+            rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(woodbury_invsqrt_apply(fac, rho, g[:, j])), batched_h[:, j],
+            rtol=1e-5, atol=1e-6)
+
+
+def test_get_l_block_powering_matches_single_probe():
+    rng = np.random.default_rng(8)
+    p, r = 96, 32
+    f = rng.standard_normal((p, 48)).astype(np.float32)
+    kbb = jnp.asarray(f @ f.T / 48)
+    lam = jnp.float32(0.01)
+    fac = nystrom(jax.random.PRNGKey(0), kbb, r)
+    rho = lam + fac.lam[-1]
+    one = float(get_l_dense(jax.random.PRNGKey(1), kbb, lam, fac, rho, num_iters=30))
+    blk = float(get_l_dense(jax.random.PRNGKey(2), kbb, lam, fac, rho,
+                            num_iters=10, num_probes=4))
+    # block powering reaches the same top eigenvalue in fewer rounds
+    assert blk == pytest.approx(one, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# per-column parity: (n, t) solve vs t independent single-RHS solves
+# ---------------------------------------------------------------------------
+
+
+def test_direct_multirhs_parity(problem):
+    w = np.asarray(solve_direct(problem))
+    assert w.shape == (N, T)
+    for j in range(T):
+        wj = np.asarray(solve_direct(_column_problem(problem, j)))
+        np.testing.assert_allclose(w[:, j], wj, rtol=1e-6, atol=1e-6)
+
+
+def test_askotch_multirhs_parity(problem):
+    """Same seed => identical block/preconditioner sequence, so the batched
+    iterates must match the t independent solves to f32 roundoff."""
+    cfg = ASkotchConfig(block_size=128, rank=64, backend="xla")
+    res = solve(problem, cfg, max_iters=25, eval_every=25, seed=0)
+    assert res.w.shape == (N, T)
+    for j in range(T):
+        rj = solve(_column_problem(problem, j), cfg, max_iters=25, eval_every=25,
+                   seed=0)
+        err = float(jnp.linalg.norm(res.w[:, j] - rj.w) / jnp.linalg.norm(rj.w))
+        assert err <= 1e-5, (j, err)
+
+
+def test_pcg_multirhs_parity(problem):
+    res = solve_pcg(problem, precond="nystrom", rank=64, max_iters=100, tol=1e-11,
+                    seed=0)
+    assert res.w.shape == (N, T)
+    w_star = solve_direct(problem)
+    for j in range(T):
+        rj = solve_pcg(_column_problem(problem, j), precond="nystrom", rank=64,
+                       max_iters=100, tol=1e-11, seed=0)
+        # both runs converge to the direct solution; compare against it
+        err = float(jnp.linalg.norm(res.w[:, j] - rj.w) / jnp.linalg.norm(rj.w))
+        assert err < 1e-4, (j, err)
+        err_star = float(
+            jnp.linalg.norm(res.w[:, j] - w_star[:, j]) / jnp.linalg.norm(w_star[:, j])
+        )
+        assert err_star < 1e-3, (j, err_star)
+
+
+# ---------------------------------------------------------------------------
+# per-head reporting
+# ---------------------------------------------------------------------------
+
+
+def test_per_head_residual_reporting(problem):
+    # moderate tol: the recursively-updated CG residual still tracks the true
+    # residual here (they only part ways at the f32 floor)
+    res = solve_pcg(problem, precond="nystrom", rank=64, max_iters=60, tol=1e-5)
+    rec = res.history[-1]
+    heads = rec["rel_residual_per_head"]
+    assert len(heads) == T
+    # aggregate Frobenius residual is consistent with the per-head residuals
+    agg, per_head = problem.residual_report(res.w)
+    assert rec["rel_residual"] == pytest.approx(float(agg), rel=0.05, abs=1e-8)
+    np.testing.assert_allclose(heads, np.asarray(per_head), rtol=0.05, atol=1e-8)
+    assert min(heads) >= 0
+
+
+def test_askotch_history_has_heads(problem):
+    cfg = ASkotchConfig(block_size=128, rank=64, backend="xla")
+    res = solve(problem, cfg, max_iters=20, eval_every=10)
+    assert all(len(r["rel_residual_per_head"]) == T for r in res.history)
+    # sketch_res tracks one value per head
+    assert res.history[-1]["sketch_res"] >= 0
+
+
+def test_solver_api_unknown_option_errors(problem):
+    with pytest.raises(ValueError, match="unknown option.*askotch.*accepted"):
+        solver_api.solve(problem, "askotch", bogus_knob=3)
+    with pytest.raises(ValueError, match="unknown option.*pcg-nystrom"):
+        solver_api.solve(problem, "pcg-nystrom", block_size=10)
+    with pytest.raises(ValueError, match="unknown method"):
+        solver_api.solve(problem, "not-a-method")
+
+
+# ---------------------------------------------------------------------------
+# one-vs-all round trip through the unified API
+# ---------------------------------------------------------------------------
+
+
+def test_one_vs_all_roundtrip():
+    x_tr, y_tr, lab_tr, x_te, y_te, lab_te = synthetic.krr_one_vs_all(
+        0, 600, 6, num_classes=4, n_test=200)
+    assert y_tr.shape == (600, 4)
+    prob = KRRProblem(x=x_tr, y=y_tr, kernel="rbf", sigma=1.5,
+                      lam_unscaled=1e-5, backend="xla")
+    out = solver_api.solve(prob, "askotch", block_size=128, rank=64,
+                           max_iters=150, eval_every=50)
+    assert out.w.shape == (600, 4)
+    assert out.info["t"] == 4
+    assert len(out.info["rel_residual_per_head"]) == 4
+    pred = out.predict_fn(x_te)
+    assert pred.shape == (200, 4)
+    m = evaluate(pred, y_te)  # top-1 argmax accuracy for t > 1
+    assert float(m.accuracy) > 0.8, float(m.accuracy)
+    top1 = float(jnp.mean((jnp.argmax(pred, axis=1) == lab_te).astype(jnp.float32)))
+    assert top1 == pytest.approx(float(m.accuracy))
+    mh = evaluate_per_head(pred, y_te)
+    assert mh.accuracy.shape == (4,)
+    assert float(jnp.min(mh.accuracy)) > 0.5
+
+
+def test_krr_predict_server_buckets(problem):
+    from repro.serving.krr_serve import make_krr_predict_fn
+
+    w = solve_direct(problem)
+    serve = make_krr_predict_fn(problem.op, w, max_batch=256)
+    r = np.random.default_rng(2)
+    for q in (1, 7, 33, 300):  # odd sizes, bucket boundaries, > max_batch
+        xq = jnp.asarray(r.standard_normal((q, D)).astype(np.float32))
+        got = np.asarray(serve(xq))
+        want = np.asarray(problem.predict(w, xq))
+        assert got.shape == (q, T)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_evaluate_single_head_unchanged():
+    m = evaluate(jnp.asarray([1.0, -1.0, 2.0]), jnp.asarray([1.0, 1.0, 2.0]))
+    assert m.accuracy == pytest.approx(2 / 3)
+    # (n, 1) behaves like (n,): sign accuracy, not argmax
+    m1 = evaluate(jnp.asarray([[1.0], [-1.0], [2.0]]),
+                  jnp.asarray([[1.0], [1.0], [2.0]]))
+    assert m1.accuracy == pytest.approx(2 / 3)
