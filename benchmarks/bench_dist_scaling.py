@@ -1,0 +1,117 @@
+"""Distributed scaling: sharded-operator matvec + ASkotch iteration
+throughput vs. host-device count.
+
+Each device count needs its own process (XLA_FLAGS must be set before the
+first jax import), so this bench spawns one subprocess per point and
+aggregates the timings.  Emits, per devices in {1, 2, 4, 8}:
+
+    dist_matvec_dev{D}       — sharded k_lam_matvec, (n, t) RHS
+    dist_askotch_dev{D}      — one fused distributed ASkotch iteration
+    derived: speedup vs. the 1-device run
+
+On CPU the collectives are in-process memcpy, so this measures the sharding
+overhead floor, not real scaling — the point is that the overhead stays flat
+while per-device work shrinks (the dry-run roofline covers real meshes).
+Device counts the host cannot force (or that time out) are skipped with a
+note rather than failing the harness.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import emit, note
+
+DEVICE_COUNTS = (1, 2, 4, 8)
+N, D, T, ITERS = 2048, 8, 4, 10
+
+_CHILD = """
+import json, time
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.krr import KRRProblem
+from repro.distributed.krr_dist import (DistKRRConfig, init_dist_state,
+                                        make_dist_askotch_step)
+from repro.distributed.meshes import make_solver_mesh
+from repro.distributed.sharded_operator import ShardedKernelOperator
+
+n, d, t, iters = {n}, {d}, {t}, {iters}
+mesh = make_solver_mesh(({rows}, {model}))
+r = np.random.default_rng(0)
+x = jnp.asarray(r.standard_normal((n, d)).astype(np.float32))
+v = jnp.asarray(r.standard_normal((n, t)).astype(np.float32))
+op = ShardedKernelOperator.bind(mesh, x, kernel="rbf", sigma=1.5, backend="xla")
+v = jax.device_put(v, op.sharding(2))
+
+def timeit(fn, reps=3):
+    fn()  # warmup/compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+mv_us = timeit(lambda: jax.block_until_ready(op.k_lam_matvec(v, 0.5)))
+
+y = jnp.asarray(r.standard_normal((n, t)).astype(np.float32))
+cfg = DistKRRConfig(n=n, d=d, sigma=1.5, lam_unscaled=1e-5, block_size=128,
+                    rank=32, heads=t)
+step, sh = make_dist_askotch_step(mesh, cfg)
+jstep = jax.jit(step)
+state = jax.device_put(init_dist_state(cfg), sh["state"])
+xs = jax.device_put(x, sh["x"]); ys = jax.device_put(y, sh["y"])
+
+def run_iters():
+    s = state
+    for _ in range(iters):
+        s = jstep(s, xs, ys)
+    jax.block_until_ready(s.w)
+
+ask_us = timeit(run_iters) / iters
+print(json.dumps({{"matvec_us": mv_us, "askotch_us": ask_us}}))
+"""
+
+
+def _run_point(devices: int) -> dict | None:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["JAX_PLATFORMS"] = env.get("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    code = _CHILD.format(n=N, d=D, t=T, iters=ITERS, rows=devices, model=1)
+    try:
+        out = subprocess.run(
+            [sys.executable, "-c", code], capture_output=True, text=True,
+            timeout=600, env=env,
+        )
+    except subprocess.TimeoutExpired:
+        note(f"dist bench: {devices} devices timed out; skipped")
+        return None
+    if out.returncode != 0:
+        err = (out.stderr.strip().splitlines() or ["?"])[-1]
+        note(f"dist bench: {devices} devices failed; skipped ({err[:120]})")
+        return None
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def main() -> None:
+    note(f"distributed scaling: n={N} d={D} t={T}, rows-only meshes, "
+         f"devices {DEVICE_COUNTS}")
+    base: dict | None = None
+    for devices in DEVICE_COUNTS:
+        res = _run_point(devices)
+        if res is None:
+            continue
+        if base is None:
+            base = res
+        for key, tag in (("matvec_us", "matvec"), ("askotch_us", "askotch")):
+            speedup = base[key] / res[key] if base else 1.0
+            emit(f"dist_{tag}_dev{devices}", res[key],
+                 f"speedup_vs_1dev={speedup:.2f}")
+
+
+if __name__ == "__main__":
+    main()

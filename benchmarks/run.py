@@ -6,6 +6,7 @@
 #   ablation  — Nystrom/accel/rho/sampling ablations (Figs. 10-11, §6.4)
 #   kernels   — fused kernel-matvec hot-spot microbench + Pallas tile analysis
 #   multirhs  — batched (n, t) one-vs-all solve vs t sequential solves
+#   dist      — sharded-operator matvec + ASkotch iteration vs device count
 #
 # Scaled to CPU execution (the container is the oracle runtime; TPU numbers
 # come from the dry-run roofline in EXPERIMENTS.md).  Select a subset with
@@ -19,6 +20,7 @@ import traceback
 def main() -> None:
     from benchmarks import (
         bench_ablation,
+        bench_dist_scaling,
         bench_fig1_showdown,
         bench_fig9_convergence,
         bench_kernels,
@@ -33,6 +35,7 @@ def main() -> None:
         "ablation": bench_ablation.main,
         "fig1": bench_fig1_showdown.main,
         "multirhs": bench_multirhs.main,
+        "dist": bench_dist_scaling.main,
     }
     want = sys.argv[1:] or list(benches)
     failed = []

@@ -18,6 +18,27 @@ import jax.numpy as jnp
 from repro.core.operator import KernelOperator, as_multirhs
 
 
+def scaled_lam(n: int, lam_unscaled: float) -> float:
+    """The paper's regularization scaling, lam = n * lam_unscaled (App.
+    C.2.1) — the ONE place the rule lives; ``KRRProblem.lam`` and
+    ``distributed.krr_dist.DistKRRConfig.lam`` both delegate here."""
+    return float(n) * float(lam_unscaled)
+
+
+def residual_report(op, y: jax.Array, lam: float, w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(aggregate, per-head) relative residuals of (K + lam I) W = Y from ONE
+    streamed matvec.  ``op`` is anything exposing the ``k_lam_matvec``
+    operator contract — a single-device KernelOperator or a mesh-aware
+    ShardedKernelOperator (row-sharded y/w) — so distributed and local
+    history records share these numerics by construction."""
+    w2, _ = as_multirhs(w)
+    y2, _ = as_multirhs(y)
+    r = op.k_lam_matvec(w2, lam) - y2
+    ynorm = jnp.maximum(jnp.linalg.norm(y2, axis=0), jnp.finfo(y2.dtype).tiny)
+    per_head = jnp.linalg.norm(r, axis=0) / ynorm
+    return jnp.linalg.norm(r) / jnp.linalg.norm(y2), per_head
+
+
 @dataclasses.dataclass(frozen=True)
 class KRRProblem:
     x: jax.Array  # (n, d) features
@@ -38,7 +59,7 @@ class KRRProblem:
 
     @property
     def lam(self) -> float:
-        return self.n * self.lam_unscaled
+        return scaled_lam(self.n, self.lam_unscaled)
 
     @property
     def op(self) -> KernelOperator:
@@ -68,12 +89,7 @@ class KRRProblem:
 
         Solvers record both every eval; sharing the O(n^2 d) pass matters.
         """
-        w2, _ = as_multirhs(w)
-        y2, _ = as_multirhs(self.y)
-        r = self.op.k_lam_matvec(w2, self.lam) - y2
-        ynorm = jnp.maximum(jnp.linalg.norm(y2, axis=0), jnp.finfo(y2.dtype).tiny)
-        per_head = jnp.linalg.norm(r, axis=0) / ynorm
-        return jnp.linalg.norm(r) / jnp.linalg.norm(y2), per_head
+        return residual_report(self.op, self.y, self.lam, w)
 
     def predict(self, w: jax.Array, x_test: jax.Array) -> jax.Array:
         """f(x) = K(x_test, X_train) @ w; w (n,) -> (m,), w (n, t) -> (m, t)."""

@@ -7,6 +7,14 @@ Every method is multi-RHS: a (n, t) problem.y (one-vs-all heads) yields a
 history records (``rel_residual_per_head``), and a predict_fn returning
 (n_test, t) scores.  Unknown keyword options fail fast with the accepted
 option list for the method instead of leaking into a bare TypeError.
+
+A distributed solve is the SAME call: pass ``mesh=`` (a ``jax.sharding``
+Mesh whose non-"model" axes shard rows — see ``distributed.meshes.
+make_solver_mesh``) and the ASkotch/Skotch/PCG/CG methods run through the
+``ShardedKernelOperator`` path (``distributed/krr_dist.py``) with W
+row-sharded and a mesh-aware predict_fn; everything else about the contract
+(multi-RHS, history records, option validation) is unchanged.  A 1-device
+mesh is valid and runs the distributed code with no-op collectives.
 """
 
 from __future__ import annotations
@@ -57,6 +65,22 @@ METHOD_OPTIONS: dict[str, tuple[str, ...]] = {
     "direct": (),
 }
 
+_DIST_ASKOTCH_KEYS = (
+    "block_size", "rank", "mu", "nu", "powering_iters", "backend",
+    "max_iters", "tol", "eval_every", "seed", "time_budget_s",
+)
+_DIST_PCG_KEYS = (
+    "rank", "rho_mode", "backend", "max_iters", "tol", "seed", "time_budget_s",
+)
+
+#: methods (and their accepted options) reachable through solve(..., mesh=...)
+DIST_METHOD_OPTIONS: dict[str, tuple[str, ...]] = {
+    "askotch": _DIST_ASKOTCH_KEYS,
+    "skotch": _DIST_ASKOTCH_KEYS,
+    "pcg-nystrom": _DIST_PCG_KEYS,
+    "cg": _DIST_PCG_KEYS,
+}
+
 
 @dataclasses.dataclass
 class SolveOutput:
@@ -84,9 +108,46 @@ def _head_info(problem: KRRProblem, history: list[dict]) -> dict[str, Any]:
     return info
 
 
-def solve(problem: KRRProblem, method: str = "askotch", **kw) -> SolveOutput:
+def _solve_dist(problem: KRRProblem, method: str, mesh, kw: dict) -> SolveOutput:
+    # imported lazily: the single-device path stays free of the distributed
+    # stack, and distributed.krr_dist itself imports repro.core
+    from repro.distributed import krr_dist
+    from repro.serving.krr_serve import make_krr_predict_fn
+
+    if method not in DIST_METHOD_OPTIONS:
+        raise ValueError(
+            f"method {method!r} has no distributed path; mesh= supports "
+            f"{sorted(DIST_METHOD_OPTIONS)}"
+        )
+    unknown = sorted(set(kw) - set(DIST_METHOD_OPTIONS[method]))
+    if unknown:
+        raise ValueError(
+            f"unknown option(s) {unknown} for method {method!r} with mesh=; "
+            f"accepted: {sorted(DIST_METHOD_OPTIONS[method])}"
+        )
+    if method in ("askotch", "skotch"):
+        res = krr_dist.solve_askotch_dist(
+            problem, mesh, accelerated=(method == "askotch"), **kw
+        )
+    else:
+        precond = {"pcg-nystrom": "nystrom", "cg": "identity"}[method]
+        res = krr_dist.solve_pcg_dist(problem, mesh, precond=precond, **kw)
+    return SolveOutput(
+        method=method,
+        w=res.w,
+        history=res.history,
+        info={"iters": res.iters, "converged": res.converged,
+              "wall_time_s": res.wall_time_s, "mesh": dict(mesh.shape),
+              **_head_info(problem, res.history)},
+        predict_fn=make_krr_predict_fn(res.op, res.w),
+    )
+
+
+def solve(problem: KRRProblem, method: str = "askotch", *, mesh=None, **kw) -> SolveOutput:
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; available: {METHODS}")
+    if mesh is not None:
+        return _solve_dist(problem, method, mesh, kw)
     _validate_options(method, kw)
     if method in ("askotch", "skotch"):
         cfg_kw = {k: kw.pop(k) for k in _ASKOTCH_CFG_KEYS if k in kw}

@@ -1,0 +1,67 @@
+"""Version-portable shard_map / mesh construction (jax 0.4.x ... 0.6+).
+
+CI pins and some containers carry jax 0.4.x, where shard_map still lives in
+``jax.experimental`` (with ``check_rep`` instead of ``check_vma``) and mesh
+axes are untyped; on newer jax the ``Mesh`` constructor used here defaults
+to Auto-typed axes, which is the behavior the distributed layer assumes.
+Everything mesh-touching in ``repro.distributed`` and ``repro.launch`` goes
+through these two helpers so the rest of the code never branches on the jax
+version.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+try:  # jax >= 0.6: public API, VMA-based replication checking
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+
+    _CHECK_KW = "check_vma"
+except ImportError:  # jax 0.4.x/0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KW = "check_rep"
+
+def shard_map(
+    f: Callable,
+    *,
+    mesh: jax.sharding.Mesh,
+    in_specs: Any,
+    out_specs: Any,
+    check: bool = False,
+) -> Callable:
+    """``jax.shard_map`` with replication checking disabled by default.
+
+    ``check=False`` maps to ``check_vma=False`` (new jax) / ``check_rep=False``
+    (old jax); the distributed operator's out_specs are genuinely replicated
+    where declared, but the old checker cannot always prove it through
+    ``dynamic_slice`` + ``all_gather`` chains.
+    """
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **{_CHECK_KW: check}
+    )
+
+
+def make_mesh(
+    shape: tuple[int, ...], axes: tuple[str, ...]
+) -> jax.sharding.Mesh:
+    """Build a Mesh over the first ``prod(shape)`` devices.
+
+    Unlike ``jax.make_mesh`` this accepts a shape smaller than the device
+    count (it slices), which is what lets a size-1 solver mesh run inside a
+    plain single-device pytest process.
+    """
+    size = int(np.prod(shape))
+    devices = jax.devices()
+    if size > len(devices):
+        raise ValueError(
+            f"mesh shape {shape} needs {size} devices; "
+            f"only {len(devices)} available (set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={size} for a "
+            f"host-platform test mesh)"
+        )
+    arr = np.asarray(devices[:size]).reshape(shape)
+    return jax.sharding.Mesh(arr, axes)

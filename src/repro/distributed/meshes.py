@@ -21,7 +21,41 @@ import jax
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed import jax_compat
+
 _STATE = threading.local()
+
+
+def parse_mesh_spec(spec: str) -> tuple[int, int]:
+    """Parse a ``--mesh ROWSxMODEL`` spec ("4x2" -> (4, 2)).
+
+    "auto" (or "") puts every local device on the row axis — the right
+    default for KRR, whose workhorse parallelism is row sharding.
+    """
+    if spec in ("auto", ""):
+        return (len(jax.devices()), 1)
+    parts = spec.lower().split("x")
+    if len(parts) != 2 or not all(p.isdigit() and int(p) > 0 for p in parts):
+        raise ValueError(
+            f"mesh spec {spec!r} invalid; accepted: 'ROWSxMODEL' with "
+            f"positive integers (e.g. '4x2') or 'auto'"
+        )
+    return (int(parts[0]), int(parts[1]))
+
+
+def make_solver_mesh(spec: str | tuple[int, int] | None = None) -> Mesh:
+    """("data", "model") mesh for distributed KRR solves.
+
+    ``spec``: "ROWSxMODEL" string, (rows, model) tuple, or None/"auto" for
+    all local devices on rows.  A (1, 1) mesh is always valid — size-1 axes
+    make every collective a no-op, so the distributed code path runs in a
+    plain single-device process (the pytest fallback).
+    """
+    if spec is None or isinstance(spec, str):
+        rows, model = parse_mesh_spec(spec if isinstance(spec, str) else "auto")
+    else:
+        rows, model = spec
+    return jax_compat.make_mesh((rows, model), ("data", "model"))
 
 
 def default_rules(mesh: Mesh) -> dict[str, Any]:

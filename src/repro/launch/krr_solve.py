@@ -1,14 +1,17 @@
 """KRR solve launcher — the paper's workload end-to-end.
 
     PYTHONPATH=src python -m repro.launch.krr_solve --n 20000 --d 9 \
-        --method askotch --iters 300 [--distributed]
+        --method askotch --iters 300 [--mesh 4x2]
 
     # one-vs-all multi-class: t heads solved in ONE multi-RHS pass
     PYTHONPATH=src python -m repro.launch.krr_solve --dataset one-vs-all \
         --classes 8 --method askotch
 
-Single-device path uses repro.core (any solver from the paper's comparison
-set); --distributed runs the shard_map multi-device ASkotch.
+A distributed solve is the same call as a local one: ``--mesh ROWSxMODEL``
+(e.g. ``--mesh 4x2``; ``--mesh auto`` = all devices on rows) routes the
+askotch/skotch/pcg-nystrom/cg methods through ``solve(..., mesh=...)`` on a
+ShardedKernelOperator — multi-RHS (one-vs-all) included.  ``--distributed``
+is a deprecated alias for ``--mesh auto``.
 """
 
 from __future__ import annotations
@@ -17,7 +20,7 @@ import argparse
 import json
 import time
 
-import jax
+import numpy as np
 
 from repro.core.krr import KRRProblem, evaluate, evaluate_per_head
 from repro.core.solver_api import solve as solve_any
@@ -35,17 +38,19 @@ def main() -> None:
     ap.add_argument("--method", default="askotch")
     ap.add_argument("--iters", type=int, default=300)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--distributed", action="store_true")
+    ap.add_argument("--mesh", default=None,
+                    help="ROWSxMODEL device mesh (e.g. 4x2) or 'auto'; "
+                         "runs the solve distributed via ShardedKernelOperator")
+    ap.add_argument("--distributed", action="store_true",
+                    help="deprecated alias for --mesh auto")
     ap.add_argument("--dataset", default="regression",
                     choices=["regression", "classification", "one-vs-all", "taxi"])
     ap.add_argument("--classes", type=int, default=4,
                     help="number of one-vs-all heads (dataset=one-vs-all)")
     args = ap.parse_args()
 
-    if args.distributed and args.dataset == "one-vs-all":
-        ap.error("--distributed is single-RHS for now; it does not support "
-                 "--dataset one-vs-all (run the heads through the "
-                 "single-device multi-RHS path instead)")
+    mesh_spec = args.mesh if args.mesh is not None else (
+        "auto" if args.distributed else None)
 
     if args.dataset == "taxi":
         x, y = synthetic.taxi_like(args.seed, args.n + args.n_test, args.d)
@@ -64,53 +69,40 @@ def main() -> None:
     prob = KRRProblem(x=x_tr, y=y_tr, kernel=args.kernel, sigma=args.sigma,
                       lam_unscaled=args.lam, backend="xla")
 
-    t0 = time.perf_counter()
-    if args.distributed:
-        from repro.distributed.krr_dist import (
-            DistKRRConfig, init_dist_state, make_dist_askotch_step,
-        )
-        ndev = len(jax.devices())
-        model = 2 if ndev % 2 == 0 and ndev > 1 else 1
-        mesh = jax.make_mesh(
-            (ndev // model, model), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        )
-        dcfg = DistKRRConfig(
-            n=args.n, d=args.d, kernel=args.kernel, sigma=args.sigma,
-            lam_unscaled=args.lam,
-            block_size=max(64, args.n // 100), rank=min(100, max(16, args.n // 200)),
-        )
-        step, sh = make_dist_askotch_step(mesh, dcfg)
-        state = init_dist_state(dcfg, args.seed)
-        with mesh:
-            jstep = jax.jit(step)
-            xs = jax.device_put(x_tr, sh["x"])
-            ys = jax.device_put(y_tr, sh["y"])
-            state = jax.device_put(state, sh["state"])
-            for _ in range(args.iters):
-                state = jstep(state, xs, ys)
-                jax.block_until_ready(state.w)
-        w = state.w
-        info = {"method": "askotch-distributed", "iters": args.iters}
+    if args.method == "direct":
+        kw = {}
+    elif args.method == "eigenpro":
+        kw = {"epochs": max(1, args.iters // 100)}  # SGD epochs, not iters
     else:
-        if args.method == "direct":
-            kw = {}
-        elif args.method == "eigenpro":
-            kw = {"epochs": max(1, args.iters // 100)}  # SGD epochs, not iters
-        else:
-            kw = {"max_iters": args.iters}
-        if args.method == "falkon":
-            # default center count, clamped so tiny-n runs stay sampleable
-            kw["m"] = min(1000, max(50, args.n // 20), args.n)
+        kw = {"max_iters": args.iters}
+    if args.method == "falkon":
+        # default center count, clamped so tiny-n runs stay sampleable
+        kw["m"] = min(1000, max(50, args.n // 20), args.n)
+
+    t0 = time.perf_counter()
+    if mesh_spec is not None:
+        from repro.distributed.meshes import make_solver_mesh
+
+        mesh = make_solver_mesh(mesh_spec)
+        out = solve_any(prob, args.method, mesh=mesh, **kw)
+        # gather the row-sharded weights for host-side reporting
+        w = np.asarray(out.w)
+        info = {"method": f"{args.method}-distributed", **out.info}
+    else:
         out = solve_any(prob, args.method, **kw)
         w, info = out.w, {"method": args.method, **out.info}
 
-    if args.distributed or args.method != "falkon":
+    if args.method == "falkon":  # inducing-point weights: full-K residual undefined
+        rel, rel_heads = -1.0, None
+    elif mesh_spec is not None and out.history:
+        # the distributed solve already evaluated the residual on the mesh —
+        # don't re-stream the O(n^2 d) kernel pass on one host device
+        rel = out.history[-1]["rel_residual"]
+        rel_heads = out.history[-1].get("rel_residual_per_head")
+    else:
         rel_agg, rel_heads = prob.residual_report(w)
         rel = float(rel_agg)
-    else:  # inducing-point weights (falkon): full-K residual is undefined
-        rel, rel_heads = -1.0, None
-    pred = prob.predict(w, x_te) if args.distributed else out.predict_fn(x_te)
+    pred = np.asarray(out.predict_fn(x_te))  # gather (mesh path) / no-op copy
     m = evaluate(pred, y_te)
     report = {
         **info,

@@ -3,21 +3,23 @@
 ``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
 importing this module never touches jax device state — the dry-run sets
 XLA_FLAGS before the first jax call and only then builds meshes.
+
+Mesh construction goes through ``distributed.jax_compat`` so the same code
+runs on jax 0.4.x (no axis types) and 0.6+ (typed Auto axes).
 """
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.distributed.jax_compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
-    """Small mesh for CI-grade dry-run tests (8 host devices)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    """Small mesh for CI-grade dry-run tests; (1, 1) runs on one device."""
+    return make_mesh(shape, axes)

@@ -1,10 +1,17 @@
 """Batched KRR prediction serving.
 
 Standalone module (no dependency on the LM model stack): wraps a trained
-weight matrix behind a KernelOperator so solved KRR models can serve request
+weight matrix behind a kernel operator so solved KRR models can serve request
 traffic.  Requests are padded to power-of-two buckets (bounded jit cache) and
 each bucket is one fused K(x_query, X_train) pass serving all t one-vs-all
 heads at once.
+
+The operator may be a single-device ``KernelOperator`` or a mesh-aware
+``ShardedKernelOperator`` — both expose the same ``row_block_matvec(a, v)``
+contract, so the SAME serving closure drives a sharded fleet: queries stay
+replicated, the training rows and the weight matrix stay row-sharded, and
+each bucket costs one psum of (bucket, t) partial scores
+(``make_sharded_krr_predict_fn`` wires this up from host arrays).
 """
 
 from __future__ import annotations
@@ -15,13 +22,15 @@ import jax.numpy as jnp
 from repro.core.operator import KernelOperator
 
 
-def make_krr_predict_fn(op: KernelOperator, w: jax.Array, *, max_batch: int = 4096):
+def make_krr_predict_fn(op, w: jax.Array, *, max_batch: int = 4096):
     """Batched KRR scorer: (q, d) queries -> (q,) or (q, t) scores.
 
-    The returned closure pads each request up to the next power-of-two bucket
-    (>= 8, <= max_batch) so the jit cache stays O(log max_batch) deep under
-    arbitrary traffic shapes; oversize requests stream in max_batch chunks.
-    One fused kernel pass serves all heads of a (n, t) weight matrix.
+    ``op`` is a KernelOperator or ShardedKernelOperator over the training
+    rows; ``w`` the solved weights ((n,) or (n, t)), row-sharded to match a
+    sharded ``op``.  The returned closure pads each request up to the next
+    power-of-two bucket (>= 8, <= max_batch) so the jit cache stays
+    O(log max_batch) deep under arbitrary traffic shapes; oversize requests
+    stream in max_batch chunks.  One fused kernel pass serves all heads.
     """
 
     @jax.jit
@@ -50,3 +59,32 @@ def make_krr_predict_fn(op: KernelOperator, w: jax.Array, *, max_batch: int = 40
         return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
 
     return predict
+
+
+def make_sharded_krr_predict_fn(
+    mesh,
+    x_train: jax.Array,
+    w: jax.Array,
+    *,
+    kernel: str = "rbf",
+    sigma: float = 1.0,
+    backend: str = "auto",
+    max_batch: int = 4096,
+):
+    """Serve all t heads from row-sharded training points on ``mesh``.
+
+    Places ``x_train`` and ``w`` row-sharded (non-"model" mesh axes) and
+    returns the same batched predict closure as :func:`make_krr_predict_fn`;
+    per bucket the only wire traffic is the (bucket, t) psum of partial
+    scores.  On a 1-device mesh this is exactly the single-device server.
+    """
+    from repro.distributed.sharded_operator import ShardedKernelOperator
+
+    op = ShardedKernelOperator.bind(
+        mesh, x_train, kernel=kernel, sigma=sigma, backend=backend
+    )
+    w_sh = jax.device_put(jnp.asarray(w), op.sharding(jnp.ndim(w)))
+    return make_krr_predict_fn(op, w_sh, max_batch=max_batch)
+
+
+__all__ = ["KernelOperator", "make_krr_predict_fn", "make_sharded_krr_predict_fn"]

@@ -1,10 +1,16 @@
-"""Distributed paths (subprocess-isolated: these force a multi-device host
-platform, which must not leak into other tests' single-device world).
+"""Distributed paths.
 
-  * shard_map distributed ASkotch == single-device ASkotch quality
-  * small-mesh dry-run of two archs (reduced configs) lowers + compiles
-  * elastic checkpoint: save on mesh A, restore on mesh B
-  * fault injection: train loop restarts from checkpoint and finishes
+Two tiers per scenario (the 1-device-fallback satellite):
+
+  * ``*_inprocess_*`` — run in THIS pytest process on the largest solver
+    mesh the process' devices allow (a (1, 1) mesh on plain single-device
+    runs: size-1 axes make every collective a no-op, so the whole sharded
+    code path executes).  These MUST pass everywhere.
+  * subprocess tests — force a genuinely multi-device host platform
+    (``--xla_force_host_platform_device_count``), which must not leak into
+    other tests' single-device world.  xfail(strict=False): multi-device CPU
+    collectives time out in constrained containers; they pass (XPASS) where
+    the host supports them.
 """
 
 import json
@@ -16,14 +22,25 @@ import textwrap
 import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+sys.path.insert(0, SRC)
+
+
+def _collective_timeout_flags() -> str:
+    """The collective stuck/terminate timeouts only exist in newer XLA CPU
+    builds — older ones treat unknown XLA_FLAGS as fatal."""
+    import jax
+
+    if tuple(int(p) for p in jax.__version__.split(".")[:2]) < (0, 5):
+        return ""
+    return (" --xla_cpu_collective_call_warn_stuck_timeout_seconds=240"
+            " --xla_cpu_collective_call_terminate_timeout_seconds=600")
 
 
 def run_py(code: str, devices: int = 8, timeout: int = 900) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = (
-        f"--xla_force_host_platform_device_count={devices} "
-        "--xla_cpu_collective_call_warn_stuck_timeout_seconds=240 "
-        "--xla_cpu_collective_call_terminate_timeout_seconds=600"
+        f"--xla_force_host_platform_device_count={devices}"
+        + _collective_timeout_flags()
     )
     env["PYTHONPATH"] = SRC
     out = subprocess.run(
@@ -34,7 +51,132 @@ def run_py(code: str, devices: int = 8, timeout: int = 900) -> str:
     return out.stdout
 
 
-@pytest.mark.xfail(strict=False, reason="multi-device CPU collectives time out in constrained containers (known-failing since seed); passes where the host supports them")
+def _solver_mesh():
+    """Largest (rows, model) solver mesh this process can build."""
+    import jax
+
+    from repro.distributed.meshes import make_solver_mesh
+
+    nd = len(jax.devices())
+    shape = (2, 2) if nd >= 4 else ((2, 1) if nd >= 2 else (1, 1))
+    return make_solver_mesh(shape)
+
+
+# ---------------------------------------------------------------------------
+# in-process variants — MUST pass (1-device mesh fallback)
+# ---------------------------------------------------------------------------
+
+
+def _mrhs_problem(n=256, d=5, t=3, seed=0):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.krr import KRRProblem
+
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal((n, d)).astype(np.float32))
+    base = KRRProblem(x=x, y=jnp.zeros(n), kernel="rbf", sigma=2.0,
+                      lam_unscaled=1e-5, backend="xla")
+    w_true = jnp.asarray(r.standard_normal((n, t)).astype(np.float32))
+    y = base.op.k_lam_matvec(w_true, base.lam)
+    return KRRProblem(x=x, y=y, kernel="rbf", sigma=2.0, lam_unscaled=1e-5,
+                      backend="xla")
+
+
+def test_dist_askotch_inprocess_matches_single_device():
+    """solve(..., mesh=...) ASkotch with (n, t) RHS converges on the same
+    problem the single-device solver handles — the parity acceptance test."""
+    from repro.core.solver_api import solve
+
+    prob = _mrhs_problem()
+    out = solve(prob, "askotch", mesh=_solver_mesh(), block_size=64, rank=24,
+                max_iters=400, eval_every=50, tol=1e-6)
+    assert out.w.shape == (256, 3)
+    assert out.history[-1]["rel_residual"] < 0.01
+    assert len(out.history[-1]["rel_residual_per_head"]) == 3
+    pred = out.predict_fn(prob.x[:10])
+    assert pred.shape == (10, 3)
+
+
+def test_dist_pcg_inprocess_matches_single_device():
+    """Distributed blocked PCG == single-device blocked PCG (same blocked_cg
+    loop, operator matvec swapped) on a (n, t) one-vs-all system."""
+    import jax.numpy as jnp
+
+    from repro.core.solver_api import solve
+
+    prob = _mrhs_problem()
+    ref = solve(prob, "pcg-nystrom", rank=64, max_iters=200, tol=1e-9)
+    out = solve(prob, "pcg-nystrom", mesh=_solver_mesh(), rank=64,
+                max_iters=200, tol=1e-9)
+    assert out.history[-1]["rel_residual"] < 1e-6
+    dw = float(jnp.linalg.norm(out.w - ref.w) / jnp.linalg.norm(ref.w))
+    assert dw < 1e-2, dw  # both sit on the true solution (tol 1e-9)
+    # 1-D RHS path
+    prob1 = _mrhs_problem(t=1)
+    out1 = solve(prob1, "cg", mesh=_solver_mesh(), max_iters=300, tol=1e-9)
+    assert out1.w.shape == (256, 1)
+    assert out1.history[-1]["rel_residual"] < 1e-6
+
+
+def test_dist_askotch_single_column_rhs():
+    """(n, 1)-shaped y (t = 1 as a column) solves like the single-device
+    path and keeps its column on the way out."""
+    from repro.core.solver_api import solve
+
+    prob = _mrhs_problem(t=1)  # y shape (256, 1)
+    assert prob.y.ndim == 2 and prob.t == 1
+    out = solve(prob, "askotch", mesh=_solver_mesh(), block_size=64, rank=24,
+                max_iters=200, eval_every=50, tol=1e-6)
+    assert out.w.shape == (256, 1)
+    assert out.history[-1]["rel_residual"] < 0.05
+    assert out.predict_fn(prob.x[:7]).shape == (7, 1)
+
+
+def test_small_mesh_dryrun_inprocess_single_device():
+    """Reduced-config lower+compile through the dryrun cell builder on a
+    (1, 1) mesh — the sharding-spec machinery without forced devices."""
+    from repro.configs.base import get_reduced_config
+    from repro.launch.dryrun import lower_cell
+    from repro.launch.mesh import make_test_mesh
+    from repro.models.model_api import ShapeConfig
+
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    cfg = get_reduced_config("qwen2-1.5b")
+    shape = ShapeConfig("train_small", "train", 64, 8)
+    compiled = lower_cell(cfg, shape, mesh).compile()
+    assert compiled.memory_analysis().temp_size_in_bytes >= 0
+
+
+def test_elastic_checkpoint_inprocess_single_device(tmp_path):
+    """Save row-sharded state, restore under a DIFFERENT sharding layout —
+    the elastic-restore path on 1-device meshes."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.checkpoint import checkpointer
+    from repro.distributed.jax_compat import make_mesh
+
+    mesh_a = make_mesh((1,), ("data",))
+    arr = jnp.arange(32, dtype=jnp.float32).reshape(8, 4)
+    sharded = jax.device_put(arr, NamedSharding(mesh_a, P("data", None)))
+    checkpointer.save(str(tmp_path), 1, {"params": {"w": sharded}})
+    mesh_b = make_mesh((1,), ("data",))
+    sh_b = {"params": {"w": NamedSharding(mesh_b, P(None, None))}}
+    restored, _, _ = checkpointer.restore(str(tmp_path), shardings=sh_b)
+    assert np.array_equal(np.asarray(restored["params"]["w"]), np.asarray(arr))
+
+
+# ---------------------------------------------------------------------------
+# subprocess multi-device tests (forced host platform; may time out in
+# constrained containers — xfail non-strict, pass where supported)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.xfail(strict=False, reason="forced multi-device CPU collectives can time out on constrained hosts; non-strict — XPASSes where supported (the in-process variants above are the hard gate)")
 def test_dist_askotch_matches_single_device():
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np, json
@@ -68,7 +210,7 @@ def test_dist_askotch_matches_single_device():
     assert rel < 0.01, rel  # single-device reaches ~1e-3 in 200 iters
 
 
-@pytest.mark.xfail(strict=False, reason="multi-device CPU collectives time out in constrained containers (known-failing since seed); passes where the host supports them")
+@pytest.mark.xfail(strict=False, reason="forced multi-device CPU collectives can time out on constrained hosts; non-strict — XPASSes where supported (the in-process variants above are the hard gate)")
 def test_small_mesh_dryrun_two_archs():
     """Reduced-config lower+compile through the dryrun cell builder on a
     (2, 4) mesh — proves the sharding spec machinery end to end."""
@@ -96,21 +238,19 @@ def test_small_mesh_dryrun_two_archs():
     assert all(v >= 0 for v in res.values())
 
 
-@pytest.mark.xfail(strict=False, reason="multi-device CPU collectives time out in constrained containers (known-failing since seed); passes where the host supports them")
+@pytest.mark.xfail(strict=False, reason="forced multi-device CPU collectives can time out on constrained hosts; non-strict — XPASSes where supported (the in-process variants above are the hard gate)")
 def test_elastic_checkpoint_across_meshes(tmp_path):
     """Save sharded state from a (4,) mesh; restore onto a (2,) mesh."""
     out = run_py(f"""
         import json, jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.checkpoint import checkpointer
-        devs = jax.devices()
-        mesh_a = jax.make_mesh((4,), ("data",),
-            axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.distributed.jax_compat import make_mesh
+        mesh_a = make_mesh((4,), ("data",))
         arr = jnp.arange(32, dtype=jnp.float32).reshape(8, 4)
         sharded = jax.device_put(arr, NamedSharding(mesh_a, P("data", None)))
         checkpointer.save({str(tmp_path)!r}, 1, {{"params": {{"w": sharded}}}})
-        mesh_b = jax.make_mesh((2,), ("data",),
-            axis_types=(jax.sharding.AxisType.Auto,))
+        mesh_b = make_mesh((2,), ("data",))
         sh_b = {{"params": {{"w": NamedSharding(mesh_b, P("data", None))}}}}
         restored, _, _ = checkpointer.restore({str(tmp_path)!r}, shardings=sh_b)
         w = restored["params"]["w"]
@@ -127,7 +267,6 @@ def test_fault_injection_restart(tmp_path):
     post-restart trajectory is deterministic (same data cursor)."""
     import argparse
 
-    sys.path.insert(0, SRC)
     from repro.launch import train as train_mod
 
     args = argparse.Namespace(
