@@ -2,7 +2,7 @@
 and the Pallas kernel's arithmetic-intensity analysis for the TPU target.
 
 Wall-clock is CPU (execution backend); the Pallas-tile roofline numbers are
-derived analytically from the BlockSpec tiling (DESIGN.md §3) since the TPU
+derived analytically from the BlockSpec tiling (docs/architecture.md) since the TPU
 is the target, not the runtime."""
 
 from __future__ import annotations

@@ -7,6 +7,7 @@
 #   kernels   — fused kernel-matvec hot-spot microbench + Pallas tile analysis
 #   multirhs  — batched (n, t) one-vs-all solve vs t sequential solves
 #   dist      — sharded-operator matvec + ASkotch iteration vs device count
+#   tuning    — tile-sharing (sigma, lam, fold) sweep vs naive s*l*k loop
 #
 # Scaled to CPU execution (the container is the oracle runtime; TPU numbers
 # come from the dry-run roofline in EXPERIMENTS.md).  Select a subset with
@@ -26,6 +27,7 @@ def main() -> None:
         bench_kernels,
         bench_multirhs,
         bench_table2_scaling,
+        bench_tuning,
     )
 
     benches = {
@@ -36,6 +38,7 @@ def main() -> None:
         "fig1": bench_fig1_showdown.main,
         "multirhs": bench_multirhs.main,
         "dist": bench_dist_scaling.main,
+        "tuning": bench_tuning.main,
     }
     want = sys.argv[1:] or list(benches)
     failed = []

@@ -1,13 +1,21 @@
 """The paper's primary contribution: Skotch/ASkotch approximate sketch-and-
-project solvers for full KRR, plus every baseline the paper compares against.
+project solvers for full KRR, plus every baseline the paper compares against
+and the (sigma, lam) tuning subsystem that picks their hyperparameters.
 """
 
 from repro.core.askotch import ASkotchConfig, SolveResult, solve, solve_scan
 from repro.core.krr import KRRProblem, evaluate, evaluate_per_head
 from repro.core.operator import KernelOperator
 from repro.core.skotch import solve_skotch
-from repro.core.solver_api import METHOD_OPTIONS, METHODS, SolveOutput
+from repro.core.solver_api import (
+    METHOD_OPTIONS,
+    METHODS,
+    TUNE_OPTIONS,
+    SolveOutput,
+    tune,
+)
 from repro.core.solver_api import solve as solve_any
+from repro.core.tuning import TuneResult, apply_best
 
 __all__ = [
     "ASkotchConfig",
@@ -17,10 +25,14 @@ __all__ = [
     "METHOD_OPTIONS",
     "SolveOutput",
     "SolveResult",
+    "TUNE_OPTIONS",
+    "TuneResult",
+    "apply_best",
     "evaluate",
     "evaluate_per_head",
     "solve",
     "solve_any",
     "solve_scan",
     "solve_skotch",
+    "tune",
 ]

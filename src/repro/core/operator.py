@@ -1,7 +1,8 @@
 """KernelOperator — the single owner of (kernel, sigma, backend, chunking).
 
 Every solver used to re-thread the ``(kernel, sigma, backend)`` triple into
-each ``ops.*`` call; this layer centralizes that plumbing (DESIGN.md §4).
+each ``ops.*`` call; this layer centralizes that plumbing (docs/
+architecture.md, layer 2).
 An operator is a frozen view over a row set ``x`` exposing the four
 primitives the whole stack is built from:
 
@@ -45,14 +46,18 @@ class KernelOperator:
 
     @property
     def n(self) -> int:
+        """Number of rows (training points) the operator spans."""
         return self.x.shape[0]
 
     @property
     def d(self) -> int:
+        """Feature dimension of the row points."""
         return self.x.shape[1]
 
     @property
     def shape(self) -> tuple[int, int]:
+        """(n, n) — the shape of the kernel matrix K(x, x) this operator
+        applies without materializing."""
         return (self.n, self.n)
 
     # -- derived operators --------------------------------------------------

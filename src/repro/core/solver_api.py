@@ -81,6 +81,13 @@ DIST_METHOD_OPTIONS: dict[str, tuple[str, ...]] = {
     "cg": _DIST_PCG_KEYS,
 }
 
+#: accepted keyword options of tune() — same fail-fast contract as
+#: METHOD_OPTIONS (unknown options raise with the accepted list)
+TUNE_OPTIONS: tuple[str, ...] = (
+    "sigmas", "lams", "folds", "search", "num_samples", "strategy",
+    "rank", "max_iters", "tol", "seed", "warm_start",
+)
+
 
 @dataclasses.dataclass
 class SolveOutput:
@@ -143,7 +150,60 @@ def _solve_dist(problem: KRRProblem, method: str, mesh, kw: dict) -> SolveOutput
     )
 
 
+def tune(problem: KRRProblem, *, mesh=None, **kw):
+    """Hyperparameter search over (sigma, lam) with k-fold CV — the
+    tile-sharing sweep of ``core.tuning`` behind the solver-API contract.
+
+    Args:
+      problem: data container (``x``/``y``/``kernel``/``backend`` used;
+        ``sigma``/``lam_unscaled`` are the quantities being tuned).
+      mesh: optional ``jax.sharding.Mesh``; candidates then run over the
+        ``ShardedKernelOperator`` path, same as ``solve(..., mesh=...)``.
+      **kw: any of :data:`TUNE_OPTIONS` (``sigmas``, ``lams``, ``folds``,
+        ``search``, ``num_samples``, ``strategy``, ``rank``, ``max_iters``,
+        ``tol``, ``seed``, ``warm_start``); unknown options raise ValueError
+        with the accepted list.
+
+    Returns:
+      A :class:`repro.core.tuning.TuneResult`; refit with
+      ``solve(tuning.apply_best(problem, result), method)`` and serve the
+      exported ``result.best`` config via ``serving.krr_serve.
+      make_krr_predict_fn_from_config``.
+    """
+    unknown = sorted(set(kw) - set(TUNE_OPTIONS))
+    if unknown:
+        raise ValueError(
+            f"unknown option(s) {unknown} for tune(); "
+            f"accepted: {sorted(TUNE_OPTIONS)}"
+        )
+    from repro.core import tuning  # lazy: keeps solve()-only imports light
+
+    return tuning.tune(problem, mesh=mesh, **kw)
+
+
 def solve(problem: KRRProblem, method: str = "askotch", *, mesh=None, **kw) -> SolveOutput:
+    """Solve (K + lam I) W = Y with any method the paper benchmarks.
+
+    Args:
+      problem: the :class:`~repro.core.krr.KRRProblem`; ``problem.y`` may be
+        (n,) or (n, t) one-vs-all heads — every method runs all t heads in
+        one multi-RHS solve.
+      method: one of :data:`METHODS` (see docs/solvers.md for the per-method
+        matrix).
+      mesh: optional ``jax.sharding.Mesh``; methods in
+        :data:`DIST_METHOD_OPTIONS` then run distributed over a
+        ``ShardedKernelOperator`` with W row-sharded.  A 1-device mesh is
+        valid and runs the distributed code with no-op collectives.
+      **kw: method-specific options — exactly :data:`METHOD_OPTIONS[method]`
+        (:data:`DIST_METHOD_OPTIONS[method]` with ``mesh=``); anything else
+        raises ValueError with the accepted list.
+
+    Returns:
+      A :class:`SolveOutput`: ``w`` ((n,), (n, t), or (m[, t]) for Falkon's
+      inducing-point weights), per-iteration ``history`` records
+      (``rel_residual``, ``rel_residual_per_head``), an ``info`` dict, and a
+      ``predict_fn`` mapping (q, d) queries to (q[, t]) scores.
+    """
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; available: {METHODS}")
     if mesh is not None:

@@ -1,6 +1,6 @@
 """Distributed KRR solvers — the paper's methods on a production mesh,
 built entirely from :class:`~repro.distributed.sharded_operator.
-ShardedKernelOperator` composites (DESIGN.md §7).
+ShardedKernelOperator` composites (docs/architecture.md, layer 3).
 
 Two solve paths share the operator layer and the mesh:
 

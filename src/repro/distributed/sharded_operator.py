@@ -8,7 +8,8 @@ over an ``x`` whose rows are sharded across the non-"model" axes of a
 ``jax.sharding.Mesh``.  Every collective is explicit (``psum`` /
 ``all_gather`` inside ``shard_map``); all local compute dispatches through a
 plain per-shard :class:`KernelOperator`, so the xla/pallas/interpret kernel
-backends — multi-RHS ``(n, t)`` included — come for free (DESIGN.md §7).
+backends — multi-RHS ``(n, t)`` included — come for free (docs/
+architecture.md, layer 3).
 
 Sharding contract (rows = every mesh axis except "model"):
 
@@ -99,14 +100,17 @@ class ShardedKernelOperator:
 
     @property
     def rows(self) -> tuple[str, ...]:
+        """The mesh axes sharding rows (every axis except "model")."""
         return row_axes(self.mesh)
 
     @property
     def model(self) -> str | None:
+        """The "model" axis name if the mesh has one, else None."""
         return MODEL_AXIS if MODEL_AXIS in self.mesh.axis_names else None
 
     @property
     def n_row_shards(self) -> int:
+        """Total number of row shards S (product of the non-"model" axes)."""
         s = 1
         for a in self.rows:
             s *= self.mesh.shape[a]
@@ -114,24 +118,29 @@ class ShardedKernelOperator:
 
     @property
     def n_model(self) -> int:
+        """Size M of the "model" axis (1 when the mesh has none)."""
         return self.mesh.shape[MODEL_AXIS] if self.model else 1
 
     @property
     def n(self) -> int:
+        """Global row count of the bound (row-sharded) x."""
         self._require_bound()
         return self.x.shape[0]
 
     @property
     def d(self) -> int:
+        """Feature dimension of the row points."""
         self._require_bound()
         return self.x.shape[1]
 
     @property
     def shape(self) -> tuple[int, int]:
+        """(n, n) — the global kernel matrix shape this operator applies."""
         return (self.n, self.n)
 
     @property
     def n_loc(self) -> int:
+        """Rows per shard, n / S (bind() guarantees the division is exact)."""
         return self.n // self.n_row_shards
 
     def _require_bound(self) -> None:
@@ -150,6 +159,7 @@ class ShardedKernelOperator:
         return NamedSharding(self.mesh, self.vec_spec(ndim))
 
     def replicated(self) -> NamedSharding:
+        """NamedSharding for fully-replicated (block-level) arrays."""
         return NamedSharding(self.mesh, P())
 
     # -- local views ---------------------------------------------------------
@@ -191,6 +201,7 @@ class ShardedKernelOperator:
         return rid.astype(jnp.int32)
 
     def shard_model_id(self) -> jax.Array:
+        """"model"-axis index of the calling device (0 without the axis)."""
         return jax.lax.axis_index(self.model) if self.model else jnp.int32(0)
 
     def model_slice(self, arr: jax.Array, loc: int) -> jax.Array:
@@ -200,11 +211,13 @@ class ShardedKernelOperator:
         return jax.lax.dynamic_slice_in_dim(arr, self.shard_model_id() * loc, loc)
 
     def model_all_gather(self, arr: jax.Array) -> jax.Array:
+        """all_gather over "model" (no-op when the axis is absent/size 1)."""
         if self.n_model == 1:
             return arr
         return jax.lax.all_gather(arr, self.model, tiled=True)
 
     def model_psum(self, arr: jax.Array) -> jax.Array:
+        """psum over "model" (no-op when the axis is absent/size 1)."""
         if self.n_model == 1:
             return arr
         return jax.lax.psum(arr, self.model)

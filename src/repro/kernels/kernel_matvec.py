@@ -3,7 +3,7 @@
 Computes ``out = K(A, B) @ V`` without materializing K, where
 ``K[i, j] = k(A[i], B[j])`` for k in {rbf, laplacian, matern52}.
 
-TPU-native tiling (see DESIGN.md §3):
+TPU-native tiling (see docs/architecture.md, "Pallas matvec tiling"):
 
   grid = (m // bm, n // bn); the n axis is the contraction and iterates
   innermost so the (bm, kv) f32 accumulator tile stays resident in VMEM.

@@ -12,6 +12,10 @@ contract, so the SAME serving closure drives a sharded fleet: queries stay
 replicated, the training rows and the weight matrix stay row-sharded, and
 each bucket costs one psum of (bucket, t) partial scores
 (``make_sharded_krr_predict_fn`` wires this up from host arrays).
+
+``make_krr_predict_fn_from_config`` builds either flavor straight from the
+best-config dict ``solver_api.tune()`` exports (docs/tuning.md), closing the
+tune -> refit -> serve loop.
 """
 
 from __future__ import annotations
@@ -87,4 +91,47 @@ def make_sharded_krr_predict_fn(
     return make_krr_predict_fn(op, w_sh, max_batch=max_batch)
 
 
-__all__ = ["KernelOperator", "make_krr_predict_fn", "make_sharded_krr_predict_fn"]
+def make_krr_predict_fn_from_config(
+    config: dict,
+    x_train: jax.Array,
+    w: jax.Array,
+    *,
+    mesh=None,
+    max_batch: int = 4096,
+):
+    """Serve a refit model from a ``tune()`` best-config export.
+
+    Args:
+      config: the JSON-able dict ``TuneResult.best`` carries (or a CLI
+        ``--export`` file re-read): requires ``kernel`` and ``sigma``;
+        ``backend`` is honored when present.  Extra keys (``lam_unscaled``,
+        ``cv_mse``, ``folds``) are ignored here — regularization lives in the
+        solve, not the scorer.
+      x_train: (n, d) training rows the weights were fit on.
+      w: the refit weights, (n,) or (n, t).
+      mesh: optional Mesh — serve from row-sharded training rows via
+        :func:`make_sharded_krr_predict_fn` instead of one device.
+
+    Returns:
+      The same batched predict closure as :func:`make_krr_predict_fn`.
+    """
+    kernel = config["kernel"]
+    sigma = float(config["sigma"])
+    backend = config.get("backend", "auto")
+    if mesh is not None:
+        return make_sharded_krr_predict_fn(
+            mesh, jnp.asarray(x_train), jnp.asarray(w), kernel=kernel,
+            sigma=sigma, backend=backend, max_batch=max_batch,
+        )
+    op = KernelOperator(
+        x=jnp.asarray(x_train), kernel=kernel, sigma=sigma, backend=backend
+    )
+    return make_krr_predict_fn(op, jnp.asarray(w), max_batch=max_batch)
+
+
+__all__ = [
+    "KernelOperator",
+    "make_krr_predict_fn",
+    "make_krr_predict_fn_from_config",
+    "make_sharded_krr_predict_fn",
+]

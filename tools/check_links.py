@@ -1,0 +1,60 @@
+"""Dead-link check over the markdown docs (CI ``docs-check`` job).
+
+    python tools/check_links.py [file.md ...]
+
+Default file set: README.md, DESIGN.md, docs/*.md.  Every relative markdown
+link ``[text](target)`` must resolve to an existing file (anchors are
+stripped; ``http(s)://`` and ``mailto:`` targets are skipped — no network in
+CI).  Exits non-zero listing the dead links.  ``tests/test_docs.py`` runs the
+same check in-process so tier-1 catches dead links without the CI job.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# [text](target) — target captured up to the closing paren, no spaces
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:")
+
+
+def default_files(root: pathlib.Path) -> list[pathlib.Path]:
+    files = [root / "README.md", root / "DESIGN.md"]
+    files += sorted((root / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def dead_links(files: list[pathlib.Path]) -> list[str]:
+    """Return ``"file: target"`` entries for every unresolvable relative link."""
+    bad = []
+    for f in files:
+        for target in _LINK.findall(f.read_text()):
+            if target.startswith(_SKIP_PREFIXES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:  # pure in-page anchor
+                continue
+            if not (f.parent / path).exists():
+                bad.append(f"{f}: {target}")
+    return bad
+
+
+def main(argv: list[str]) -> int:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    files = [pathlib.Path(a) for a in argv] or default_files(root)
+    missing = [str(f) for f in files if not f.exists()]
+    if missing:
+        print("missing input file(s):", *missing, sep="\n  ")
+        return 1
+    bad = dead_links(files)
+    if bad:
+        print("dead links:", *bad, sep="\n  ")
+        return 1
+    print(f"ok: {len(files)} file(s), no dead links")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
