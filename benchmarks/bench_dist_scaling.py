@@ -1,5 +1,5 @@
-"""Distributed scaling: sharded-operator matvec + ASkotch iteration
-throughput vs. host-device count.
+"""Distributed scaling: sharded-operator matvec + ASkotch iteration +
+tuning-sweep throughput vs. host-device count.
 
 Each device count needs its own process (XLA_FLAGS must be set before the
 first jax import), so this bench spawns one subprocess per point and
@@ -7,6 +7,8 @@ aggregates the timings.  Emits, per devices in {1, 2, 4, 8}:
 
     dist_matvec_dev{D}       — sharded k_lam_matvec, (n, t) RHS
     dist_askotch_dev{D}      — one fused distributed ASkotch iteration
+    dist_tune_dev{D}         — a full tune(mesh=...) sweep (the tuning
+                               column: wall + kernel sweeps per device count)
     derived: speedup vs. the 1-device run
 
 On CPU the collectives are in-process memcpy, so this measures the sharding
@@ -72,7 +74,18 @@ def run_iters():
     jax.block_until_ready(s.w)
 
 ask_us = timeit(run_iters) / iters
-print(json.dumps({{"matvec_us": mv_us, "askotch_us": ask_us}}))
+
+# the tuning column: one full tune(mesh=...) sweep through the stacked
+# engine (sigma x lam x fold columns over the sharded operator)
+from repro.core.solver_api import tune
+prob = KRRProblem(x=x, y=y[:, 0], backend="xla")
+tune_res = {{}}
+def run_tune():
+    tune_res["r"] = tune(prob, mesh=mesh, sigmas=(0.8, 1.5), lams=(1e-3, 1e-1),
+                         folds=2, rank=32, max_iters=40, tol=1e-4, seed=0)
+tune_us = timeit(run_tune, reps=1)
+print(json.dumps({{"matvec_us": mv_us, "askotch_us": ask_us,
+                   "tune_us": tune_us, "tune_sweeps": tune_res["r"].sweeps}}))
 """
 
 
@@ -111,6 +124,10 @@ def main() -> None:
             speedup = base[key] / res[key] if base else 1.0
             emit(f"dist_{tag}_dev{devices}", res[key],
                  f"speedup_vs_1dev={speedup:.2f}")
+        if "tune_us" in res:
+            speedup = base["tune_us"] / res["tune_us"]
+            emit(f"dist_tune_dev{devices}", res["tune_us"],
+                 f"sweeps={res['tune_sweeps']:.1f}_speedup_vs_1dev={speedup:.2f}")
 
 
 if __name__ == "__main__":

@@ -6,8 +6,9 @@
 #   ablation  — Nystrom/accel/rho/sampling ablations (Figs. 10-11, §6.4)
 #   kernels   — fused kernel-matvec hot-spot microbench + Pallas tile analysis
 #   multirhs  — batched (n, t) one-vs-all solve vs t sequential solves
-#   dist      — sharded-operator matvec + ASkotch iteration vs device count
+#   dist      — sharded matvec/ASkotch iteration + tune() vs device count
 #   tuning    — tile-sharing (sigma, lam, fold) sweep vs naive s*l*k loop
+#   multikernel — weight-axis sharing: q-kernel random search vs naive loop
 #
 # Scaled to CPU execution (the container is the oracle runtime; TPU numbers
 # come from the dry-run roofline in EXPERIMENTS.md).  Select a subset with
@@ -25,6 +26,7 @@ def main() -> None:
         bench_fig1_showdown,
         bench_fig9_convergence,
         bench_kernels,
+        bench_multikernel,
         bench_multirhs,
         bench_table2_scaling,
         bench_tuning,
@@ -39,6 +41,7 @@ def main() -> None:
         "multirhs": bench_multirhs.main,
         "dist": bench_dist_scaling.main,
         "tuning": bench_tuning.main,
+        "multikernel": bench_multikernel.main,
     }
     want = sys.argv[1:] or list(benches)
     failed = []

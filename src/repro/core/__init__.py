@@ -5,17 +5,19 @@ and the (sigma, lam) tuning subsystem that picks their hyperparameters.
 
 from repro.core.askotch import ASkotchConfig, SolveResult, solve, solve_scan
 from repro.core.krr import KRRProblem, evaluate, evaluate_per_head
+from repro.core.multikernel import WeightedSumKernelOperator, make_operator
 from repro.core.operator import KernelOperator
 from repro.core.skotch import solve_skotch
 from repro.core.solver_api import (
     METHOD_OPTIONS,
     METHODS,
+    MULTIKERNEL_TUNE_OPTIONS,
     TUNE_OPTIONS,
     SolveOutput,
     tune,
 )
 from repro.core.solver_api import solve as solve_any
-from repro.core.tuning import TuneResult, apply_best
+from repro.core.tuning import TuneResult, apply_best, tune_multikernel
 
 __all__ = [
     "ASkotchConfig",
@@ -23,16 +25,20 @@ __all__ = [
     "KernelOperator",
     "METHODS",
     "METHOD_OPTIONS",
+    "MULTIKERNEL_TUNE_OPTIONS",
     "SolveOutput",
     "SolveResult",
     "TUNE_OPTIONS",
     "TuneResult",
+    "WeightedSumKernelOperator",
     "apply_best",
     "evaluate",
     "evaluate_per_head",
+    "make_operator",
     "solve",
     "solve_any",
     "solve_scan",
     "solve_skotch",
     "tune",
+    "tune_multikernel",
 ]

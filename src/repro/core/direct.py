@@ -4,6 +4,12 @@ Ground truth for tests and the small-n end of the baselines (paper §1 notes
 it stops being viable at n >~ 1e4, which our scaling benchmark reproduces).
 Multi-RHS for free: one factorization back-substitutes all t columns of a
 (n, t) Y (the one-vs-all case), a (n,) y returns a (n,) w.
+
+The same factorization yields closed-form leave-one-out residuals
+(:func:`loo_residuals`) — the exact small-n cross-check of the tuning
+subsystem's k-fold CV scores (``tune(folds=n)`` IS leave-one-out, and its
+scores must match this formula to solver tolerance; single- and multi-kernel
+problems alike, since everything goes through ``problem.op.block``).
 """
 
 from __future__ import annotations
@@ -11,11 +17,49 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.krr import KRRProblem
+from repro.core.krr import KRRProblem, scaled_lam
+from repro.core.operator import as_multirhs, maybe_squeeze
+
+
+def _chol_k_lam(problem: KRRProblem, lam: float) -> jax.Array:
+    k = problem.op.block(problem.x)
+    k_lam = k + lam * jnp.eye(problem.n, dtype=k.dtype)
+    return jnp.linalg.cholesky(k_lam)
 
 
 def solve_direct(problem: KRRProblem) -> jax.Array:
-    k = problem.op.block(problem.x)
-    k_lam = k + problem.lam * jnp.eye(problem.n, dtype=k.dtype)
-    chol = jnp.linalg.cholesky(k_lam)
+    """Dense Cholesky solve of (K + lam I) W = Y; W (n,) or (n, t)."""
+    chol = _chol_k_lam(problem, problem.lam)
     return jax.scipy.linalg.cho_solve((chol, True), problem.y)
+
+
+def loo_residuals(problem: KRRProblem, *, lam: float | None = None) -> jax.Array:
+    """Closed-form leave-one-out residuals from ONE Cholesky.
+
+    For C = K + lam I and alpha = C^{-1} y, the model trained without point
+    i predicts it with residual  y_i - f_{-i}(x_i) = alpha_i / (C^{-1})_{ii}
+    (the classic kernel-ridge LOO identity; one factorization serves all n
+    leave-outs and all t heads).
+
+    ``lam`` defaults to ``scaled_lam(n - 1, lam_unscaled)`` — each LOO model
+    trains on n - 1 rows, and the paper's App. C.2.1 rule scales the shift
+    by the TRAINING size, exactly as ``tune(folds=n)`` solves its fold
+    systems.  Pass ``lam=problem.lam`` for the fixed-shift variant.
+
+    Returns residuals shaped like ``problem.y``; mean squared entries are
+    the exact LOO CV score.
+    """
+    lam_f = scaled_lam(problem.n - 1, problem.lam_unscaled) if lam is None else lam
+    chol = _chol_k_lam(problem, float(lam_f))
+    y2, squeeze = as_multirhs(problem.y)
+    alpha = jax.scipy.linalg.cho_solve((chol, True), y2)
+    c_inv = jax.scipy.linalg.cho_solve(
+        (chol, True), jnp.eye(problem.n, dtype=y2.dtype)
+    )
+    resid = alpha / jnp.diag(c_inv)[:, None]
+    return maybe_squeeze(resid, squeeze)
+
+
+def loo_mse(problem: KRRProblem, *, lam: float | None = None) -> float:
+    """Exact leave-one-out CV mean-squared-error (see :func:`loo_residuals`)."""
+    return float(jnp.mean(loo_residuals(problem, lam=lam) ** 2))

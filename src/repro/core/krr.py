@@ -41,12 +41,29 @@ def residual_report(op, y: jax.Array, lam: float, w: jax.Array) -> tuple[jax.Arr
 
 @dataclasses.dataclass(frozen=True)
 class KRRProblem:
+    """Problem container.  ``kernel`` may be one kernel name or a tuple of
+    names — a tuple makes the problem *multi-kernel*: K is the convex
+    combination ``sum_i weights[i] K_i`` (``weights`` defaults to uniform,
+    ``sigma`` may be shared or per-kernel) and every solver runs through a
+    :class:`~repro.core.multikernel.WeightedSumKernelOperator` unchanged."""
+
     x: jax.Array  # (n, d) features
     y: jax.Array  # (n,) or (n, t) targets (t one-vs-all heads)
-    kernel: str = "rbf"
-    sigma: float = 1.0
+    kernel: str | tuple[str, ...] = "rbf"
+    sigma: float | tuple[float, ...] = 1.0
     lam_unscaled: float = 1e-6
     backend: str = "auto"
+    weights: tuple[float, ...] | None = None  # multi-kernel combination weights
+
+    def __post_init__(self) -> None:
+        if isinstance(self.kernel, list):
+            object.__setattr__(self, "kernel", tuple(self.kernel))
+        if isinstance(self.sigma, list):
+            object.__setattr__(self, "sigma", tuple(self.sigma))
+        if self.weights is not None:
+            object.__setattr__(
+                self, "weights", tuple(float(w) for w in self.weights)
+            )
 
     @property
     def n(self) -> int:
@@ -62,10 +79,15 @@ class KRRProblem:
         return scaled_lam(self.n, self.lam_unscaled)
 
     @property
-    def op(self) -> KernelOperator:
-        """The kernel operator owning (kernel, sigma, backend) plumbing."""
-        return KernelOperator(
-            x=self.x, kernel=self.kernel, sigma=self.sigma, backend=self.backend
+    def op(self):
+        """The kernel operator owning (kernel, sigma, backend) plumbing —
+        a :class:`KernelOperator`, or a :class:`~repro.core.multikernel.
+        WeightedSumKernelOperator` when ``kernel`` is a tuple."""
+        from repro.core.multikernel import make_operator  # avoid import cycle
+
+        return make_operator(
+            self.x, kernel=self.kernel, sigma=self.sigma,
+            weights=self.weights, backend=self.backend,
         )
 
     def matvec(self, v: jax.Array) -> jax.Array:

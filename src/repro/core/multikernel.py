@@ -1,0 +1,292 @@
+"""WeightedSumKernelOperator — the KernelOperator contract over a convex
+combination of base kernels.
+
+No single kernel family wins across the paper's 23-task testbed; himalaya's
+multiple-kernel ridge (``solve_multiple_kernel_ridge_random_search``) shows
+convex combinations ``K_w = sum_i w_i K_i`` with ``w`` on the simplex
+routinely beating the best single kernel.  This module is the operator layer
+of that capability: a drop-in :class:`~repro.core.operator.KernelOperator`
+whose every primitive dispatches through the fused multi-kernel ops
+(``repro.kernels.ops.kernel_*_multi``) — ONE data sweep computes the pairwise
+distance tile once and applies all q kernel maps, so a q-kernel operator
+costs ~1 kernel sweep instead of q.
+
+Because the full contract (``matvec`` / ``row_block_matvec`` / ``block`` /
+``block_idx`` / ``trace_est`` / ``restrict`` / ``with_points``) is satisfied,
+every solver in the stack — ASkotch, the CG family, Falkon, EigenPro,
+direct — and the serving layer run multi-kernel unchanged; a
+``KRRProblem`` with a kernel *tuple* builds one automatically, and
+``ShardedKernelOperator`` composes with it for mesh runs (its per-shard
+``local_op`` goes through :func:`make_operator`).
+
+Two extra primitives serve the multi-kernel tuner (``core.tuning.
+tune_multikernel``):
+
+  * ``matvec_cols(v, w_cols)`` — per-COLUMN weight vectors (q, t): column c
+    applies ``sum_i w_cols[i, c] K_i``.  Every weight candidate of a random
+    search becomes one more column of the same stacked solve.
+  * ``sketch_components(omega)`` — stacked per-kernel sketches ``K_i Omega``
+    (q, n, r) from one data sweep; a weight candidate's Nystrom
+    preconditioner is the candidate's weighted combination of these sketches
+    (``K_w Omega = sum_i w_i K_i Omega``), so preconditioning a whole weight
+    search costs ONE sweep.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernels import KERNEL_NAMES
+from repro.core.operator import KernelOperator
+from repro.kernels import ops
+
+
+def canonical_kernels(
+    kernels, sigma, weights=None
+) -> tuple[tuple[str, ...], tuple[float, ...], tuple[float, ...]]:
+    """Validate and normalize a multi-kernel spec.
+
+    Args:
+      kernels: sequence of q base-kernel names (each in ``KERNEL_NAMES``).
+      sigma: one shared bandwidth (float) or a per-kernel sequence of q.
+      weights: optional q nonnegative weights (``None`` -> uniform ``1/q``);
+        NOT renormalized — callers own the simplex constraint.
+
+    Returns:
+      ``(kernels, sigmas, weights)`` as plain tuples of length q.
+    """
+    kernels = tuple(str(k) for k in kernels)
+    if not kernels:
+        raise ValueError("multi-kernel spec needs at least one kernel")
+    for k in kernels:
+        if k not in KERNEL_NAMES:
+            raise ValueError(
+                f"unknown kernel {k!r} in multi-kernel spec; available: "
+                f"{KERNEL_NAMES}"
+            )
+    q = len(kernels)
+    if isinstance(sigma, (tuple, list)):
+        sigmas = tuple(float(s) for s in sigma)
+        if len(sigmas) != q:
+            raise ValueError(
+                f"sigma has {len(sigmas)} entries for {q} kernels; pass one "
+                f"shared float or exactly one per kernel"
+            )
+    else:
+        sigmas = (float(sigma),) * q
+    if any(s <= 0 for s in sigmas):
+        raise ValueError(f"sigmas must be positive; got {sigmas}")
+    if weights is None:
+        w = (1.0 / q,) * q
+    else:
+        w = tuple(float(x) for x in weights)
+        if len(w) != q:
+            raise ValueError(
+                f"weights has {len(w)} entries for {q} kernels"
+            )
+        if any(x < 0 for x in w) or sum(w) <= 0:
+            raise ValueError(
+                f"weights must be nonnegative with a positive sum; got {w}"
+            )
+    return kernels, sigmas, w
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightedSumKernelOperator:
+    """Linear-operator view of ``K_w = sum_i w_i K_i(x, x)``.
+
+    ``sigma`` may be one shared bandwidth or a per-kernel tuple; ``weights``
+    defaults to uniform ``1/q``.  All primitives are multi-RHS exactly like
+    :class:`~repro.core.operator.KernelOperator`.
+    """
+
+    x: jax.Array  # (n, d) row points
+    kernels: tuple[str, ...] = ("rbf", "laplacian")
+    sigma: float | tuple[float, ...] = 1.0
+    weights: tuple[float, ...] | None = None
+    backend: str = "auto"
+    chunk_a: int = 4096
+    chunk_b: int = 8192
+
+    def __post_init__(self) -> None:
+        ks, sg, w = canonical_kernels(self.kernels, self.sigma, self.weights)
+        object.__setattr__(self, "kernels", ks)
+        object.__setattr__(
+            self, "sigma",
+            sg[0] if all(s == sg[0] for s in sg) else sg,
+        )
+        object.__setattr__(self, "weights", w)
+
+    # -- structure -----------------------------------------------------------
+
+    @property
+    def q(self) -> int:
+        """Number of base kernels in the combination."""
+        return len(self.kernels)
+
+    @property
+    def sigmas(self) -> tuple[float, ...]:
+        """Per-kernel bandwidths (a shared float expands to length q)."""
+        if isinstance(self.sigma, tuple):
+            return self.sigma
+        return (float(self.sigma),) * self.q
+
+    @property
+    def n(self) -> int:
+        """Number of rows (training points) the operator spans."""
+        return self.x.shape[0]
+
+    @property
+    def d(self) -> int:
+        """Feature dimension of the row points."""
+        return self.x.shape[1]
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        """(n, n) — the shape of K_w(x, x) this operator applies."""
+        return (self.n, self.n)
+
+    def components(self) -> tuple[KernelOperator, ...]:
+        """The q single-kernel operators of the combination (tests, naive
+        reference paths; the fused ops never build these internally)."""
+        return tuple(
+            KernelOperator(
+                x=self.x, kernel=k, sigma=s, backend=self.backend,
+                chunk_a=self.chunk_a, chunk_b=self.chunk_b,
+            )
+            for k, s in zip(self.kernels, self.sigmas)
+        )
+
+    # -- derived operators ---------------------------------------------------
+
+    def with_points(self, x_new: jax.Array) -> "WeightedSumKernelOperator":
+        """Same kernel combination over a different row set."""
+        return dataclasses.replace(self, x=x_new)
+
+    def restrict(self, idx: jax.Array) -> "WeightedSumKernelOperator":
+        """Operator over the sub-row-set ``x[idx]`` (centers, folds)."""
+        return self.with_points(jnp.take(self.x, idx, axis=0))
+
+    def with_weights(self, weights) -> "WeightedSumKernelOperator":
+        """Same kernels/bandwidths under a different weight vector."""
+        return dataclasses.replace(self, weights=tuple(float(w) for w in weights))
+
+    # -- the four primitives -------------------------------------------------
+
+    def matvec(self, v: jax.Array) -> jax.Array:
+        """K_w(x, x) @ v; v: (n,) or (n, t) -> same leading-dim shape."""
+        return self.row_block_matvec(self.x, v)
+
+    def row_block_matvec(self, a: jax.Array, v: jax.Array) -> jax.Array:
+        """K_w(a, x) @ v streamed over x — one data sweep for all q kernels."""
+        return ops.kernel_matvec_multi(
+            a, self.x, v, kernels=self.kernels, sigmas=self.sigmas,
+            weights=jnp.asarray(self.weights, jnp.float32),
+            backend=self.backend, chunk_a=self.chunk_a, chunk_b=self.chunk_b,
+        )
+
+    def block(self, a: jax.Array, b: jax.Array | None = None) -> jax.Array:
+        """Materialize K_w(a, b) (b defaults to a).  Small tiles only."""
+        b = a if b is None else b
+        return ops.kernel_block_multi(
+            a, b, kernels=self.kernels, sigmas=self.sigmas,
+            weights=self.weights, backend=self.backend,
+        )
+
+    def block_idx(self, idx: jax.Array) -> jax.Array:
+        """(K_w)_BB for a row-index block (Skotch/ASkotch step)."""
+        xb = jnp.take(self.x, idx, axis=0)
+        return self.block(xb, xb)
+
+    def trace_est(self) -> jax.Array:
+        """tr K_w = (sum_i w_i) * n — every base kernel is unit-diagonal."""
+        return jnp.float32(sum(self.weights) * self.n)
+
+    # -- composites shared by several solvers --------------------------------
+
+    def k_lam_matvec(self, v: jax.Array, lam: jax.Array | float) -> jax.Array:
+        """(K_w + lam I) @ v."""
+        return self.matvec(v) + lam * v
+
+    def sketch(self, omega: jax.Array) -> jax.Array:
+        """K_w @ omega for a (n, r) test matrix (Nystrom sketches)."""
+        return self.matvec(omega)
+
+    # -- tuning-engine primitives --------------------------------------------
+
+    def matvec_cols(self, v: jax.Array, w_cols: jax.Array) -> jax.Array:
+        """Per-column-weighted matvec: out[:, c] = (sum_i w_cols[i, c] K_i) @ v[:, c].
+
+        ``v``: (n, t), ``w_cols``: (q, t).  This is how every weight
+        candidate of a random search rides ONE stacked solve: each column
+        carries its own weight vector, the data sweep is shared.
+        """
+        return self.row_block_matvec_cols(self.x, v, w_cols)
+
+    def row_block_matvec_cols(
+        self, a: jax.Array, v: jax.Array, w_cols: jax.Array
+    ) -> jax.Array:
+        """Per-column-weighted K(a, x) @ v for an arbitrary row block ``a``
+        (the sharded operator's per-shard partial of :meth:`matvec_cols`)."""
+        return ops.kernel_matvec_multi(
+            a, self.x, v, kernels=self.kernels, sigmas=self.sigmas,
+            weights=w_cols, backend=self.backend,
+            chunk_a=self.chunk_a, chunk_b=self.chunk_b,
+        )
+
+    def sketch_components(self, omega: jax.Array) -> jax.Array:
+        """Stacked per-kernel sketches (q, n, r): out[i] = K_i @ omega.
+
+        One data sweep; a weight candidate's Nystrom sketch is then the
+        weighted combination ``sum_i w_i out[i]`` — zero extra kernel work.
+        """
+        return self.row_block_components(self.x, omega)
+
+    def row_block_components(self, a: jax.Array, v: jax.Array) -> jax.Array:
+        """Stacked per-kernel K_i(a, x) @ v (q, b[, t]) for a row block."""
+        return ops.kernel_matvec_components(
+            a, self.x, v, kernels=self.kernels, sigmas=self.sigmas,
+            backend=self.backend, chunk_a=self.chunk_a, chunk_b=self.chunk_b,
+        )
+
+
+def make_operator(
+    x: jax.Array,
+    *,
+    kernel: str | tuple[str, ...] = "rbf",
+    sigma: float | tuple[float, ...] = 1.0,
+    weights=None,
+    backend: str = "auto",
+    chunk_a: int = 4096,
+    chunk_b: int = 8192,
+):
+    """Build the right operator for a kernel spec — the ONE dispatch point.
+
+    A string ``kernel`` yields a plain :class:`KernelOperator`; a tuple/list
+    yields a :class:`WeightedSumKernelOperator`.  ``KRRProblem.op`` and
+    ``ShardedKernelOperator.local_op`` both route through here, which is what
+    makes multi-kernel solves work across the whole solver stack and on a
+    mesh without any solver changes.
+    """
+    if isinstance(kernel, (tuple, list)):
+        return WeightedSumKernelOperator(
+            x=x, kernels=tuple(kernel), sigma=sigma, weights=weights,
+            backend=backend, chunk_a=chunk_a, chunk_b=chunk_b,
+        )
+    if weights is not None:
+        raise ValueError(
+            "weights= only applies to a multi-kernel spec (a tuple of kernel "
+            f"names); got kernel={kernel!r}"
+        )
+    if isinstance(sigma, (tuple, list)):
+        raise ValueError(
+            "per-kernel sigma tuples only apply to a multi-kernel spec; got "
+            f"kernel={kernel!r} with sigma={sigma!r}"
+        )
+    return KernelOperator(
+        x=x, kernel=kernel, sigma=float(sigma), backend=backend,
+        chunk_a=chunk_a, chunk_b=chunk_b,
+    )

@@ -92,11 +92,15 @@ def solve_pcg(
     tol: float = 1e-8,
     seed: int = 0,
     time_budget_s: float | None = None,
+    w0: jax.Array | None = None,
 ) -> PCGResult:
     """Blocked PCG on (K + lam I) W = Y with per-column residual tracking.
 
     History records carry ``rel_residual`` (aggregate ||R||_F / ||Y||_F) and
     ``rel_residual_per_head``; convergence requires every column below tol.
+    ``w0`` warm-starts the iteration (e.g. the fold-averaged CV solution a
+    tuning sweep hands back, ``TuneResult.best_w0``) at the cost of one
+    extra matvec for the initial residual.
     """
     t0 = time.perf_counter()
     pinv = make_preconditioner(problem, precond, rank, rho_mode, seed)
@@ -104,8 +108,11 @@ def solve_pcg(
     pinv = jax.jit(pinv)
 
     y, squeeze = as_multirhs(problem.y)
+    x0 = None
+    if w0 is not None:
+        x0, _ = as_multirhs(jnp.asarray(w0))
     res = blocked_cg(
-        matvec, y, pinv, max_iters=max_iters, tol=tol, t0=t0,
+        matvec, y, pinv, x0=x0, max_iters=max_iters, tol=tol, t0=t0,
         time_budget_s=time_budget_s,
     )
     return PCGResult(

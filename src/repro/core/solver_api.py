@@ -45,7 +45,9 @@ _ASKOTCH_CFG_KEYS = (
 _ASKOTCH_SOLVE_KEYS = (
     "max_iters", "tol", "eval_every", "seed", "time_budget_s", "callback", "w0",
 )
-_PCG_KEYS = ("rank", "rho_mode", "max_iters", "tol", "seed", "time_budget_s")
+_PCG_KEYS = (
+    "rank", "rho_mode", "max_iters", "tol", "seed", "time_budget_s", "w0",
+)
 _FALKON_KEYS = ("m", "max_iters", "tol", "seed", "jitter", "time_budget_s")
 _EIGENPRO_KEYS = (
     "rank", "subsample", "batch_size", "lr_scale", "epochs", "seed",
@@ -86,6 +88,15 @@ DIST_METHOD_OPTIONS: dict[str, tuple[str, ...]] = {
 TUNE_OPTIONS: tuple[str, ...] = (
     "sigmas", "lams", "folds", "search", "num_samples", "strategy",
     "rank", "max_iters", "tol", "seed", "warm_start",
+)
+
+#: accepted keyword options of tune() on the multi-kernel (weight-axis)
+#: path — selected when ``kernels``/``n_weight_samples``/``weights`` is
+#: passed or the problem's kernel is a tuple
+MULTIKERNEL_TUNE_OPTIONS: tuple[str, ...] = (
+    "kernels", "sigmas", "lams", "folds", "n_weight_samples", "weights",
+    "dirichlet_alpha", "strategy", "rank", "max_iters", "tol", "seed",
+    "warm_start",
 )
 
 
@@ -154,6 +165,12 @@ def tune(problem: KRRProblem, *, mesh=None, **kw):
     """Hyperparameter search over (sigma, lam) with k-fold CV — the
     tile-sharing sweep of ``core.tuning`` behind the solver-API contract.
 
+    The search grows a WEIGHT axis when the problem is multi-kernel: pass
+    ``kernels=("rbf", "laplacian", ...)`` (or a problem whose ``kernel`` is
+    already a tuple) and the sweep becomes himalaya-style random search over
+    convex kernel combinations — every (weight, lam, fold, head) candidate
+    rides the same stacked solve (``core.tuning.tune_multikernel``).
+
     Args:
       problem: data container (``x``/``y``/``kernel``/``backend`` used;
         ``sigma``/``lam_unscaled`` are the quantities being tuned).
@@ -161,8 +178,11 @@ def tune(problem: KRRProblem, *, mesh=None, **kw):
         ``ShardedKernelOperator`` path, same as ``solve(..., mesh=...)``.
       **kw: any of :data:`TUNE_OPTIONS` (``sigmas``, ``lams``, ``folds``,
         ``search``, ``num_samples``, ``strategy``, ``rank``, ``max_iters``,
-        ``tol``, ``seed``, ``warm_start``); unknown options raise ValueError
-        with the accepted list.
+        ``tol``, ``seed``, ``warm_start``) — or, on the multi-kernel path,
+        :data:`MULTIKERNEL_TUNE_OPTIONS` (adds ``kernels``,
+        ``n_weight_samples``, ``weights``, ``dirichlet_alpha``; drops
+        ``search``/``num_samples``).  Unknown options raise ValueError with
+        the accepted list.
 
     Returns:
       A :class:`repro.core.tuning.TuneResult`; refit with
@@ -170,14 +190,22 @@ def tune(problem: KRRProblem, *, mesh=None, **kw):
       exported ``result.best`` config via ``serving.krr_serve.
       make_krr_predict_fn_from_config``.
     """
-    unknown = sorted(set(kw) - set(TUNE_OPTIONS))
+    multikernel = (
+        isinstance(problem.kernel, tuple)
+        or any(k in kw for k in ("kernels", "n_weight_samples", "weights"))
+    )
+    accepted = MULTIKERNEL_TUNE_OPTIONS if multikernel else TUNE_OPTIONS
+    unknown = sorted(set(kw) - set(accepted))
     if unknown:
+        kind = "multi-kernel tune()" if multikernel else "tune()"
         raise ValueError(
-            f"unknown option(s) {unknown} for tune(); "
-            f"accepted: {sorted(TUNE_OPTIONS)}"
+            f"unknown option(s) {unknown} for {kind}; "
+            f"accepted: {sorted(accepted)}"
         )
     from repro.core import tuning  # lazy: keeps solve()-only imports light
 
+    if multikernel:
+        return tuning.tune_multikernel(problem, mesh=mesh, **kw)
     return tuning.tune(problem, mesh=mesh, **kw)
 
 
@@ -196,7 +224,12 @@ def solve(problem: KRRProblem, method: str = "askotch", *, mesh=None, **kw) -> S
         valid and runs the distributed code with no-op collectives.
       **kw: method-specific options — exactly :data:`METHOD_OPTIONS[method]`
         (:data:`DIST_METHOD_OPTIONS[method]` with ``mesh=``); anything else
-        raises ValueError with the accepted list.
+        raises ValueError with the accepted list.  Two universal overrides
+        are accepted for every method: ``kernel=`` (a name, or a TUPLE of
+        names for a weighted-sum multi-kernel solve) and ``weights=`` (the
+        combination weights) re-parameterize the problem before solving —
+        ``solve(p, "pcg-nystrom", kernel=("rbf", "matern52"), weights=(0.7,
+        0.3))`` runs the convex kernel combination through the same solver.
 
     Returns:
       A :class:`SolveOutput`: ``w`` ((n,), (n, t), or (m[, t]) for Falkon's
@@ -206,6 +239,14 @@ def solve(problem: KRRProblem, method: str = "askotch", *, mesh=None, **kw) -> S
     """
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; available: {METHODS}")
+    if "kernel" in kw or "weights" in kw:
+        # universal multi-kernel overrides: rebuild the problem, then solve
+        # through the unchanged per-method path (the operator layer absorbs
+        # the weighted combination)
+        problem = dataclasses.replace(
+            problem,
+            **{k: kw.pop(k) for k in ("kernel", "weights") if k in kw},
+        )
     if mesh is not None:
         return _solve_dist(problem, method, mesh, kw)
     _validate_options(method, kw)

@@ -72,8 +72,9 @@ class DistState(NamedTuple):
 class DistKRRConfig:
     n: int
     d: int
-    kernel: str = "rbf"
-    sigma: float = 1.0
+    kernel: str | tuple[str, ...] = "rbf"
+    sigma: float | tuple[float, ...] = 1.0
+    weights: tuple[float, ...] | None = None  # multi-kernel combination
     lam_unscaled: float = 2e-7
     block_size: int = 50_000
     rank: int = 100
@@ -102,20 +103,27 @@ class DistKRRConfig:
                     f"DistKRRConfig.{field} = {v!r} invalid; accepted: "
                     f"integers >= {minimum}"
                 )
-        if self.kernel not in KERNEL_NAMES:
+        if isinstance(self.kernel, tuple):
+            # a kernel tuple is a weighted-sum combination; validation of the
+            # names/sigmas/weights triple lives in ONE place
+            from repro.core.multikernel import canonical_kernels
+
+            canonical_kernels(self.kernel, self.sigma, self.weights)
+        elif self.kernel not in KERNEL_NAMES:
             raise ValueError(
                 f"DistKRRConfig.kernel = {self.kernel!r} invalid; accepted: "
-                f"{KERNEL_NAMES}"
+                f"{KERNEL_NAMES} or a tuple of them"
             )
         if self.backend not in BACKENDS:
             raise ValueError(
                 f"DistKRRConfig.backend = {self.backend!r} invalid; "
                 f"accepted: {BACKENDS}"
             )
-        if not self.sigma > 0:
+        sig = self.sigma if isinstance(self.sigma, tuple) else (self.sigma,)
+        if not all(s > 0 for s in sig):
             raise ValueError(
                 f"DistKRRConfig.sigma = {self.sigma!r} invalid; accepted: "
-                f"positive floats"
+                f"positive floats (or a per-kernel tuple of them)"
             )
         if not self.lam_unscaled > 0:
             raise ValueError(
@@ -143,7 +151,8 @@ class DistKRRConfig:
 def _operator_for(mesh: Mesh, cfg: DistKRRConfig) -> ShardedKernelOperator:
     """Unbound operator carrying (mesh, kernel config) for the step body."""
     return ShardedKernelOperator(
-        mesh=mesh, kernel=cfg.kernel, sigma=cfg.sigma, backend=cfg.backend
+        mesh=mesh, kernel=cfg.kernel, sigma=cfg.sigma, backend=cfg.backend,
+        weights=cfg.weights,
     )
 
 
@@ -293,7 +302,7 @@ class DistSolveResult:
 def _bind(problem: KRRProblem, mesh: Mesh, backend: str) -> ShardedKernelOperator:
     return ShardedKernelOperator.bind(
         mesh, problem.x, kernel=problem.kernel, sigma=problem.sigma,
-        backend=backend,
+        backend=backend, weights=problem.weights,
     )
 
 
@@ -325,7 +334,8 @@ def solve_askotch_dist(
     b += (-b) % op0.n_model  # round up so block rows shard over "model"
     cfg = DistKRRConfig(
         n=problem.n, d=problem.x.shape[1], kernel=problem.kernel,
-        sigma=problem.sigma, lam_unscaled=problem.lam_unscaled,
+        sigma=problem.sigma, weights=problem.weights,
+        lam_unscaled=problem.lam_unscaled,
         block_size=b, rank=min(rank, b), heads=problem.t,
         accelerated=accelerated, mu=mu, nu=nu, powering_iters=powering_iters,
         backend=backend,

@@ -74,11 +74,22 @@ class ShardedKernelOperator:
 
     mesh: Mesh
     x: jax.Array | None = None
-    kernel: str = "rbf"
-    sigma: float = 1.0
+    kernel: str | tuple[str, ...] = "rbf"
+    sigma: float | tuple[float, ...] = 1.0
     backend: str = "auto"
     chunk_a: int = 4096
     chunk_b: int = 8192
+    weights: tuple[float, ...] | None = None  # multi-kernel combination
+
+    def __post_init__(self) -> None:
+        if isinstance(self.kernel, list):
+            object.__setattr__(self, "kernel", tuple(self.kernel))
+        if isinstance(self.sigma, list):
+            object.__setattr__(self, "sigma", tuple(self.sigma))
+        if self.weights is not None:
+            object.__setattr__(
+                self, "weights", tuple(float(w) for w in self.weights)
+            )
 
     # -- construction --------------------------------------------------------
 
@@ -165,11 +176,16 @@ class ShardedKernelOperator:
     # -- local views ---------------------------------------------------------
 
     def local_op(self, pts: jax.Array) -> KernelOperator:
-        """Per-shard KernelOperator over ``pts`` — the ONLY kernel dispatch
-        point in the distributed stack (kernels.ops via core.operator)."""
-        return KernelOperator(
-            x=pts, kernel=self.kernel, sigma=self.sigma, backend=self.backend,
-            chunk_a=self.chunk_a, chunk_b=self.chunk_b,
+        """Per-shard operator over ``pts`` — the ONLY kernel dispatch point
+        in the distributed stack (kernels.ops via core.operator /
+        core.multikernel).  A kernel TUPLE yields a per-shard
+        ``WeightedSumKernelOperator``, which is how multi-kernel solves run
+        on a mesh without any collective changes."""
+        from repro.core.multikernel import make_operator
+
+        return make_operator(
+            pts, kernel=self.kernel, sigma=self.sigma, weights=self.weights,
+            backend=self.backend, chunk_a=self.chunk_a, chunk_b=self.chunk_b,
         )
 
     # -- derived operators ---------------------------------------------------
@@ -179,6 +195,7 @@ class ShardedKernelOperator:
         return ShardedKernelOperator.bind(
             self.mesh, x_new, kernel=self.kernel, sigma=self.sigma,
             backend=self.backend, chunk_a=self.chunk_a, chunk_b=self.chunk_b,
+            weights=self.weights,
         )
 
     def restrict(self, idx: jax.Array) -> KernelOperator:
@@ -412,6 +429,75 @@ class ShardedKernelOperator:
         self._require_bound()
         return self._matvec_fn(v)
 
+    def _require_multikernel(self) -> None:
+        if not isinstance(self.kernel, tuple):
+            raise ValueError(
+                "per-column-weighted primitives need a multi-kernel operator "
+                f"(a kernel tuple); got kernel={self.kernel!r}"
+            )
+
+    @cached_property
+    def _matvec_cols_fn(self):
+        def local(x_l, v_l, wc):
+            x_full = jax.lax.all_gather(x_l, self.rows, tiled=True)
+            v_full = jax.lax.all_gather(v_l, self.rows, tiled=True)
+            n = x_full.shape[0]
+            if self.n_model > 1 and n % self.n_model == 0:
+                sl = n // self.n_model
+                xs = self.model_slice(x_full, sl)
+                vs = self.model_slice(v_full, sl)
+                part = self.local_op(xs).row_block_matvec_cols(x_l, vs, wc)
+                return jax.lax.psum(part, self.model)
+            return self.local_op(x_full).row_block_matvec_cols(x_l, v_full, wc)
+
+        jitted = jax.jit(shard_map(
+            local, mesh=self.mesh,
+            in_specs=(P(self.rows, None), self.vec_spec(2), P()),
+            out_specs=self.vec_spec(2),
+        ))
+
+        def call(v, w_cols):
+            return jitted(self.x, v, w_cols)
+
+        return call
+
+    def matvec_cols(self, v: jax.Array, w_cols: jax.Array) -> jax.Array:
+        """Per-column-weighted multi-kernel matvec: out[:, c] =
+        (sum_i w_cols[i, c] K_i) @ v[:, c]; v row-sharded (n, t), ``w_cols``
+        replicated (q, t).  One fused data sweep per shard — the mesh leg of
+        the multi-kernel tuning engine."""
+        self._require_bound()
+        self._require_multikernel()
+        return self._matvec_cols_fn(v, jnp.asarray(w_cols, jnp.float32))
+
+    @cached_property
+    def _sketch_components_fn(self):
+        def local(x_l, v_l):
+            x_full = jax.lax.all_gather(x_l, self.rows, tiled=True)
+            v_full = jax.lax.all_gather(v_l, self.rows, tiled=True)
+            n = x_full.shape[0]
+            if self.n_model > 1 and n % self.n_model == 0:
+                sl = n // self.n_model
+                xs = self.model_slice(x_full, sl)
+                vs = self.model_slice(v_full, sl)
+                part = self.local_op(xs).row_block_components(x_l, vs)
+                return jax.lax.psum(part, self.model)
+            return self.local_op(x_full).row_block_components(x_l, v_full)
+
+        return jax.jit(shard_map(
+            local, mesh=self.mesh,
+            in_specs=(P(self.rows, None), self.vec_spec(2)),
+            out_specs=P(None, self.rows, None),
+        ))
+
+    def sketch_components(self, omega: jax.Array) -> jax.Array:
+        """Stacked per-kernel sketches (q, n, r): out[i] = K_i @ omega, rows
+        sharded on axis 1.  ONE data sweep serves all q Nystrom sketches of
+        the multi-kernel tuner."""
+        self._require_bound()
+        self._require_multikernel()
+        return self._sketch_components_fn(self.x, omega)
+
     @cached_property
     def _row_block_matvec_fn(self):
         def local(a, x_l, v_l):
@@ -505,7 +591,10 @@ class ShardedKernelOperator:
         return self._gather_rows_fn(jnp.asarray(idx), tuple(extras))
 
     def trace_est(self) -> jax.Array:
-        """tr K = n for the unit-diagonal testbed kernels — no collective."""
+        """tr K — no collective.  n for the unit-diagonal testbed kernels;
+        a weighted combination scales by its weight sum."""
+        if isinstance(self.kernel, tuple) and self.weights is not None:
+            return jnp.float32(sum(self.weights) * self.n)
         return jnp.float32(self.n)
 
     # -- composites shared by solvers ----------------------------------------

@@ -9,5 +9,18 @@ the jit'd dispatch layer and `ref.py` as the pure-jnp oracle.
 from repro.kernels import ops, ref
 from repro.kernels.kernel_block import kernel_block_pallas
 from repro.kernels.kernel_matvec import kernel_matvec_pallas
+from repro.kernels.multi import (
+    kernel_block_multi_pallas,
+    kernel_matvec_components_pallas,
+    kernel_matvec_multi_pallas,
+)
 
-__all__ = ["ops", "ref", "kernel_block_pallas", "kernel_matvec_pallas"]
+__all__ = [
+    "ops",
+    "ref",
+    "kernel_block_pallas",
+    "kernel_matvec_pallas",
+    "kernel_block_multi_pallas",
+    "kernel_matvec_components_pallas",
+    "kernel_matvec_multi_pallas",
+]

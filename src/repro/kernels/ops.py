@@ -21,7 +21,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import multi, ref
 from repro.kernels.kernel_block import kernel_block_pallas
 from repro.kernels.kernel_matvec import kernel_matvec_pallas
 
@@ -72,4 +72,97 @@ def kernel_block(
         return ref.kernel_block(a, b, jnp.float32(sigma), kernel=kernel)
     return kernel_block_pallas(
         a, b, kernel=kernel, sigma=float(sigma), interpret=(backend == "interpret")
+    )
+
+
+# ---------------------------------------------------------------------------
+# multi-kernel entry points — same contract, q kernels per data sweep.
+# ``kernels``/``sigmas`` are per-kernel tuples; ``weights`` is (q,) for a
+# fixed weighted-sum operator or (q, t) for per-column weight vectors (the
+# multi-kernel tuning engine).  One streamed pass computes each distance
+# family once per tile and applies every kernel map in registers/VMEM.
+# ---------------------------------------------------------------------------
+
+
+def kernel_matvec_multi(
+    a: jax.Array,
+    b: jax.Array,
+    v: jax.Array,
+    *,
+    kernels: tuple[str, ...],
+    sigmas: tuple[float, ...],
+    weights: jax.Array,
+    backend: str = "auto",
+    chunk_a: int = 4096,
+    chunk_b: int = 8192,
+) -> jax.Array:
+    """out = (sum_i w_i K_i(a, b)) @ v without materializing any K_i.
+
+    v: (n,) -> (m,) or (n, t) -> (m, t); weights (q,) or per-column (q, t).
+    """
+    backend = resolve_backend(backend)
+    kernels = tuple(kernels)
+    w = jnp.asarray(weights, jnp.float32)
+    if backend == "xla":
+        return ref.kernel_matvec_multi(
+            a, b, v, jnp.asarray(sigmas, jnp.float32), w, kernels=kernels,
+            chunk_a=chunk_a, chunk_b=chunk_b,
+        )
+    return multi.kernel_matvec_multi_pallas(
+        a, b, v, w, kernels=kernels,
+        sigmas=tuple(float(s) for s in sigmas),
+        interpret=(backend == "interpret"),
+    )
+
+
+def kernel_matvec_components(
+    a: jax.Array,
+    b: jax.Array,
+    v: jax.Array,
+    *,
+    kernels: tuple[str, ...],
+    sigmas: tuple[float, ...],
+    backend: str = "auto",
+    chunk_a: int = 4096,
+    chunk_b: int = 8192,
+) -> jax.Array:
+    """Stacked per-kernel products (q, m[, t]): out[i] = K_i(a, b) @ v.
+
+    One data sweep serves all q sketches (per-kernel Nystrom factors of the
+    multi-kernel tuner come from a single call).
+    """
+    backend = resolve_backend(backend)
+    kernels = tuple(kernels)
+    if backend == "xla":
+        return ref.kernel_matvec_components(
+            a, b, v, jnp.asarray(sigmas, jnp.float32), kernels=kernels,
+            chunk_a=chunk_a, chunk_b=chunk_b,
+        )
+    return multi.kernel_matvec_components_pallas(
+        a, b, v, kernels=kernels, sigmas=tuple(float(s) for s in sigmas),
+        interpret=(backend == "interpret"),
+    )
+
+
+def kernel_block_multi(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    kernels: tuple[str, ...],
+    sigmas: tuple[float, ...],
+    weights: tuple[float, ...],
+    backend: str = "auto",
+) -> jax.Array:
+    """Materialize sum_i w_i K_i(a, b) (small/medium blocks only)."""
+    backend = resolve_backend(backend)
+    kernels = tuple(kernels)
+    if backend == "xla":
+        return ref.kernel_block_multi(
+            a, b, jnp.asarray(sigmas, jnp.float32),
+            jnp.asarray(weights, jnp.float32), kernels=kernels,
+        )
+    return multi.kernel_block_multi_pallas(
+        a, b, kernels=kernels, sigmas=tuple(float(s) for s in sigmas),
+        weights=tuple(float(w) for w in weights),
+        interpret=(backend == "interpret"),
     )

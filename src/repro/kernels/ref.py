@@ -14,7 +14,31 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.kernels import kernel_fn
+from repro.core.kernels import _l1_dists, _sq_dists, kernel_fn
+
+
+def tile_from_dists(
+    kernel: str, d2: jax.Array | None, d1: jax.Array | None, sigma: jax.Array
+) -> jax.Array:
+    """Elementwise kernel map given precomputed distance tiles.
+
+    ``d2`` is the squared-L2 tile (rbf/matern52), ``d1`` the L1 tile
+    (laplacian) — the multi-kernel ops compute each at most once per tile
+    pair and apply every kernel map to the shared tile.  The map itself is
+    the Pallas kernels' ``_apply_kernel`` (one formula source; it is plain
+    jnp, so a traced sigma works here too).
+    """
+    from repro.kernels.kernel_matvec import _apply_kernel
+
+    return _apply_kernel(d1 if kernel == "laplacian" else d2, kernel, sigma)
+
+
+def _needs_l2(kernels: tuple[str, ...]) -> bool:
+    return any(k != "laplacian" for k in kernels)
+
+
+def _needs_l1(kernels: tuple[str, ...]) -> bool:
+    return "laplacian" in kernels
 
 
 def _pad_rows(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
@@ -81,3 +105,140 @@ def kernel_block(
 ) -> jax.Array:
     """Materialize K(a, b).  Reference for the Pallas block-build kernel."""
     return kernel_fn(kernel)(a, b, sigma)
+
+
+# ---------------------------------------------------------------------------
+# multi-kernel ops: ONE data sweep serves all q kernels (docs/tuning.md,
+# "Multi-kernel sweeps").  The pairwise distance tile is computed at most
+# once per (L2, L1) family per chunk pair; the q elementwise kernel maps and
+# the weighted accumulation ride the same streamed chunks.
+# ---------------------------------------------------------------------------
+
+
+def _multi_chunks(a, b, v, chunk_a, chunk_b):
+    """Shared padding/chunking plumbing for the multi-kernel matvecs."""
+    m = a.shape[0]
+    chunk_a = min(chunk_a, max(m, 1))
+    chunk_b = min(chunk_b, max(b.shape[0], 1))
+    bp, n = _pad_rows(b, chunk_b)
+    vp, _ = _pad_rows(v, chunk_b)
+    vp = jnp.where((jnp.arange(bp.shape[0]) < n)[:, None], vp, 0.0)
+    nb = bp.shape[0] // chunk_b
+    b_chunks = bp.reshape(nb, chunk_b, b.shape[1])
+    v_chunks = vp.reshape(nb, chunk_b, v.shape[1])
+    ap, m0 = _pad_rows(a, chunk_a)
+    na = ap.shape[0] // chunk_a
+    a_chunks = ap.reshape(na, chunk_a, a.shape[1])
+    return a_chunks, b_chunks, v_chunks, na, chunk_a, m0
+
+
+def _dist_tiles(a_blk, b_blk, kernels):
+    d2 = _sq_dists(a_blk, b_blk) if _needs_l2(kernels) else None
+    d1 = _l1_dists(a_blk, b_blk) if _needs_l1(kernels) else None
+    return d2, d1
+
+
+@functools.partial(jax.jit, static_argnames=("kernels", "chunk_a", "chunk_b"))
+def kernel_matvec_multi(
+    a: jax.Array,
+    b: jax.Array,
+    v: jax.Array,
+    sigmas: jax.Array,
+    weights: jax.Array,
+    *,
+    kernels: tuple[str, ...],
+    chunk_a: int = 4096,
+    chunk_b: int = 8192,
+) -> jax.Array:
+    """out = (sum_i w_i K_i(a, b)) @ v, streamed — one data sweep for all q.
+
+    ``weights`` is (q,) — one scalar weight per kernel — or (q, t) with a
+    per-COLUMN weight vector (the tuning engine's case: column c solves the
+    system of weight vector w[:, c]).  Per-column weights use the identity
+    ``w_ic (K_i v)[:, c] = (K_i (v * w_i))[:, c]``: v is pre-scaled per
+    kernel, so one (m, t) accumulator serves every kernel and column.
+    """
+    squeeze = v.ndim == 1
+    if squeeze:
+        v = v[:, None]
+    a_chunks, b_chunks, v_chunks, na, chunk_a, m0 = _multi_chunks(
+        a, b, v, chunk_a, chunk_b
+    )
+    w_rows = weights[:, None, :] if weights.ndim == 2 else weights[:, None, None]
+
+    def row_block(a_blk):
+        def body(acc, bv):
+            b_blk, v_blk = bv
+            d2, d1 = _dist_tiles(a_blk, b_blk, kernels)
+            for i, kn in enumerate(kernels):
+                ktile = tile_from_dists(kn, d2, d1, sigmas[i])
+                acc = acc + ktile @ (v_blk * w_rows[i])
+            return acc, None
+
+        init = jnp.zeros((a_blk.shape[0], v.shape[1]), jnp.float32)
+        out, _ = lax.scan(body, init, (b_chunks, v_chunks))
+        return out
+
+    out = lax.map(row_block, a_chunks).reshape(na * chunk_a, v.shape[1])[:m0]
+    return out[:, 0] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnames=("kernels", "chunk_a", "chunk_b"))
+def kernel_matvec_components(
+    a: jax.Array,
+    b: jax.Array,
+    v: jax.Array,
+    sigmas: jax.Array,
+    *,
+    kernels: tuple[str, ...],
+    chunk_a: int = 4096,
+    chunk_b: int = 8192,
+) -> jax.Array:
+    """Stacked per-kernel products (q, m[, t]): out[i] = K_i(a, b) @ v.
+
+    The per-kernel Nystrom sketches of the multi-kernel tuner come from ONE
+    call: the distance tile is shared, only the cheap elementwise maps and
+    matmuls repeat per kernel.
+    """
+    squeeze = v.ndim == 1
+    if squeeze:
+        v = v[:, None]
+    a_chunks, b_chunks, v_chunks, na, chunk_a, m0 = _multi_chunks(
+        a, b, v, chunk_a, chunk_b
+    )
+    q = len(kernels)
+
+    def row_block(a_blk):
+        def body(acc, bv):
+            b_blk, v_blk = bv
+            d2, d1 = _dist_tiles(a_blk, b_blk, kernels)
+            outs = [
+                acc[i] + tile_from_dists(kn, d2, d1, sigmas[i]) @ v_blk
+                for i, kn in enumerate(kernels)
+            ]
+            return jnp.stack(outs), None
+
+        init = jnp.zeros((q, a_blk.shape[0], v.shape[1]), jnp.float32)
+        out, _ = lax.scan(body, init, (b_chunks, v_chunks))
+        return out
+
+    out = lax.map(row_block, a_chunks)  # (na, q, chunk_a, t)
+    out = jnp.moveaxis(out, 1, 0).reshape(q, na * chunk_a, v.shape[1])[:, :m0]
+    return out[:, :, 0] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnames=("kernels",))
+def kernel_block_multi(
+    a: jax.Array,
+    b: jax.Array,
+    sigmas: jax.Array,
+    weights: jax.Array,
+    *,
+    kernels: tuple[str, ...],
+) -> jax.Array:
+    """Materialize sum_i w_i K_i(a, b) with the distance tiles computed once."""
+    d2, d1 = _dist_tiles(a, b, kernels)
+    out = jnp.zeros((a.shape[0], b.shape[0]), jnp.float32)
+    for i, kn in enumerate(kernels):
+        out = out + weights[i] * tile_from_dists(kn, d2, d1, sigmas[i])
+    return out

@@ -7,13 +7,20 @@
     PYTHONPATH=src python -m repro.launch.krr_tune --search random --samples 6 \
         --mesh 4x1 --dataset one-vs-all --classes 8
 
+    # multi-kernel: random search over convex kernel combinations
+    PYTHONPATH=src python -m repro.launch.krr_tune \
+        --kernels rbf,laplacian,matern52 --n-weight-samples 8
+
 The sweep is the tile-sharing path of ``core.tuning`` (``--strategy naive``
-runs the per-candidate reference loop for comparison); the report includes
-the kernel-sweep count so the sharing is visible.  After the sweep the best
-(sigma, lam) is refit on the full training set with ``--method`` and scored
-on held-out test data; ``--export PATH`` writes the serving-ready best-config
-JSON consumed by ``serving.krr_serve.make_krr_predict_fn_from_config``.
-See docs/tuning.md for the full walkthrough.
+runs the per-candidate reference loop for comparison); ``--kernels`` (a
+comma list) grows the weight axis — himalaya-style Dirichlet random search
+over convex kernel combinations on the same stacked engine.  The report
+includes the kernel-sweep count so the sharing is visible.  After the sweep
+the best config is refit on the full training set with ``--method``
+(warm-started from the winner's fold-averaged CV solution when the method
+supports ``w0``) and scored on held-out test data; ``--export PATH`` writes
+the serving-ready best-config JSON consumed by ``serving.krr_serve.
+make_krr_predict_fn_from_config``.  See docs/tuning.md for the walkthrough.
 """
 
 from __future__ import annotations
@@ -37,6 +44,13 @@ def main() -> None:
     ap.add_argument("--d", type=int, default=8)
     ap.add_argument("--n-test", type=int, default=1_000)
     ap.add_argument("--kernel", default="rbf")
+    ap.add_argument("--kernels", default=None,
+                    help="comma-separated kernel names: tune a convex "
+                         "multi-kernel combination (weight random search)")
+    ap.add_argument("--n-weight-samples", type=int, default=8,
+                    help="Dirichlet weight draws for --kernels search")
+    ap.add_argument("--dirichlet-alpha", type=float, default=1.0,
+                    help="Dirichlet concentration of the weight draws")
     ap.add_argument("--sigmas", default="0.5,1.0,2.0",
                     help="comma-separated candidate bandwidths")
     ap.add_argument("--lams", default="1e-6,1e-4,1e-2",
@@ -87,20 +101,32 @@ def main() -> None:
         mesh = make_solver_mesh(args.mesh)
 
     t0 = time.perf_counter()
-    result = tune(
-        prob,
-        mesh=mesh,
+    tune_kw = dict(
         sigmas=tuple(float(s) for s in args.sigmas.split(",")),
         lams=tuple(float(l) for l in args.lams.split(",")),
         folds=args.folds,
-        search=args.search,
-        num_samples=args.samples,
         strategy=args.strategy,
         rank=args.rank,
         max_iters=args.iters,
         tol=args.tol,
         seed=args.seed,
     )
+    if args.kernels is not None:
+        if args.search != "grid" or args.samples is not None:
+            ap.error(
+                "--search/--samples do not apply with --kernels; the weight "
+                "axis IS the random search (use --n-weight-samples)"
+            )
+        # the weight axis: every (w, lam, fold, head) candidate rides the
+        # same stacked solve (core.tuning.tune_multikernel)
+        tune_kw.update(
+            kernels=tuple(args.kernels.split(",")),
+            n_weight_samples=args.n_weight_samples,
+            dirichlet_alpha=args.dirichlet_alpha,
+        )
+    else:
+        tune_kw.update(search=args.search, num_samples=args.samples)
+    result = tune(prob, mesh=mesh, **tune_kw)
     report = {
         "best": result.best,
         "strategy": result.strategy,
@@ -111,16 +137,26 @@ def main() -> None:
         "naive_sweep_estimate": round(result.info["naive_sweep_estimate"], 2),
         "records": result.records,
     }
+    if args.kernels is not None:
+        report["weight_samples"] = result.info["weight_samples"]
     if mesh is not None:
         report["mesh"] = dict(mesh.shape)
 
     if not args.no_refit:
-        best_prob = apply_best(prob, result)
+        from repro.core.solver_api import METHOD_OPTIONS
+
+        best_prob, w0 = apply_best(prob, result, with_w0=True)
         kw = {} if args.method == "direct" else {"max_iters": args.refit_iters}
         if args.method == "eigenpro":
             kw = {"epochs": max(1, args.refit_iters // 100)}
         if args.method == "falkon":
             kw["m"] = min(1000, max(50, args.n // 20), args.n)
+        if (w0 is not None and mesh is None
+                and "w0" in METHOD_OPTIONS.get(args.method, ())):
+            # warm-start the refit from the winner's fold-averaged CV
+            # solution instead of zero
+            kw["w0"] = w0
+            report["refit_warm_start"] = True
         out = solve_any(best_prob, args.method, mesh=mesh, **kw)
         m = evaluate(np.asarray(out.predict_fn(x_te)), y_te)
         report["refit"] = {

@@ -70,8 +70,9 @@ def make_sharded_krr_predict_fn(
     x_train: jax.Array,
     w: jax.Array,
     *,
-    kernel: str = "rbf",
-    sigma: float = 1.0,
+    kernel: str | tuple[str, ...] = "rbf",
+    sigma: float | tuple[float, ...] = 1.0,
+    weights=None,
     backend: str = "auto",
     max_batch: int = 4096,
 ):
@@ -81,11 +82,14 @@ def make_sharded_krr_predict_fn(
     returns the same batched predict closure as :func:`make_krr_predict_fn`;
     per bucket the only wire traffic is the (bucket, t) psum of partial
     scores.  On a 1-device mesh this is exactly the single-device server.
+    A kernel TUPLE (+ ``weights``) serves the weighted-sum multi-kernel
+    predictor — still one fused pass per bucket.
     """
     from repro.distributed.sharded_operator import ShardedKernelOperator
 
     op = ShardedKernelOperator.bind(
-        mesh, x_train, kernel=kernel, sigma=sigma, backend=backend
+        mesh, x_train, kernel=kernel, sigma=sigma, backend=backend,
+        weights=weights,
     )
     w_sh = jax.device_put(jnp.asarray(w), op.sharding(jnp.ndim(w)))
     return make_krr_predict_fn(op, w_sh, max_batch=max_batch)
@@ -104,9 +108,12 @@ def make_krr_predict_fn_from_config(
     Args:
       config: the JSON-able dict ``TuneResult.best`` carries (or a CLI
         ``--export`` file re-read): requires ``kernel`` and ``sigma``;
-        ``backend`` is honored when present.  Extra keys (``lam_unscaled``,
-        ``cv_mse``, ``folds``) are ignored here — regularization lives in the
-        solve, not the scorer.
+        ``backend`` is honored when present.  A multi-kernel export carries
+        ``kernel`` as a LIST of names plus ``weights`` (and possibly a
+        per-kernel ``sigma`` list) — the weighted-sum predictor is
+        reconstructed exactly.  Extra keys (``lam_unscaled``, ``cv_mse``,
+        ``folds``) are ignored here — regularization lives in the solve, not
+        the scorer.
       x_train: (n, d) training rows the weights were fit on.
       w: the refit weights, (n,) or (n, t).
       mesh: optional Mesh — serve from row-sharded training rows via
@@ -116,15 +123,29 @@ def make_krr_predict_fn_from_config(
       The same batched predict closure as :func:`make_krr_predict_fn`.
     """
     kernel = config["kernel"]
-    sigma = float(config["sigma"])
+    sigma = config["sigma"]
+    weights = config.get("weights")
+    if isinstance(kernel, (tuple, list)):
+        kernel = tuple(kernel)
+        sigma = (
+            tuple(float(s) for s in sigma)
+            if isinstance(sigma, (tuple, list)) else float(sigma)
+        )
+        if weights is not None:
+            weights = tuple(float(v) for v in weights)
+    else:
+        sigma = float(sigma)
     backend = config.get("backend", "auto")
     if mesh is not None:
         return make_sharded_krr_predict_fn(
             mesh, jnp.asarray(x_train), jnp.asarray(w), kernel=kernel,
-            sigma=sigma, backend=backend, max_batch=max_batch,
+            sigma=sigma, weights=weights, backend=backend, max_batch=max_batch,
         )
-    op = KernelOperator(
-        x=jnp.asarray(x_train), kernel=kernel, sigma=sigma, backend=backend
+    from repro.core.multikernel import make_operator
+
+    op = make_operator(
+        jnp.asarray(x_train), kernel=kernel, sigma=sigma, weights=weights,
+        backend=backend,
     )
     return make_krr_predict_fn(op, jnp.asarray(w), max_batch=max_batch)
 

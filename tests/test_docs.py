@@ -18,18 +18,25 @@ PUBLIC_MODULES = (
     "repro.core.operator",
     "repro.core.krr",
     "repro.core.tuning",
+    "repro.core.multikernel",
     "repro.core.blocked_cg",
     "repro.kernels.ops",
+    "repro.kernels.multi",
     "repro.distributed.sharded_operator",
     "repro.serving.krr_serve",
 )
 
 PUBLIC_CALLABLES = {
     "repro.core.solver_api": ("solve", "tune"),
-    "repro.core.tuning": ("tune", "apply_best", "TuneResult", "SweepCounter"),
+    "repro.core.tuning": ("tune", "tune_multikernel", "apply_best",
+                          "TuneResult", "SweepCounter"),
     "repro.core.krr": ("KRRProblem", "evaluate", "evaluate_per_head",
                        "scaled_lam", "residual_report"),
-    "repro.kernels.ops": ("kernel_matvec", "kernel_block", "resolve_backend"),
+    "repro.core.multikernel": ("make_operator", "canonical_kernels"),
+    "repro.core.direct": ("solve_direct", "loo_residuals", "loo_mse"),
+    "repro.kernels.ops": ("kernel_matvec", "kernel_block", "resolve_backend",
+                          "kernel_matvec_multi", "kernel_matvec_components",
+                          "kernel_block_multi"),
     "repro.serving.krr_serve": ("make_krr_predict_fn",
                                 "make_sharded_krr_predict_fn",
                                 "make_krr_predict_fn_from_config"),
@@ -39,6 +46,7 @@ PUBLIC_CALLABLES = {
 #: classes whose public methods must each be documented
 PUBLIC_CLASSES = (
     ("repro.core.operator", "KernelOperator"),
+    ("repro.core.multikernel", "WeightedSumKernelOperator"),
     ("repro.distributed.sharded_operator", "ShardedKernelOperator"),
 )
 

@@ -164,6 +164,47 @@ def test_apply_best_and_config_serving_round_trip():
     )
 
 
+def test_refit_warm_start_from_cv_folds():
+    # the winner's fold-averaged CV solution must (a) exist for the shared
+    # strategy, (b) never cost the warm-started refit more iterations than
+    # the zero start, (c) agree with it on the solution
+    prob = _regression_problem()
+    res = tune(prob, strategy="shared", **TUNE_KW)
+    best_prob, w0 = apply_best(prob, res, with_w0=True)
+    assert w0 is not None and w0.shape == (prob.n,)
+    from repro.core.solver_api import solve
+
+    cold = solve(best_prob, "pcg-nystrom", rank=32, max_iters=300, tol=1e-6)
+    warm = solve(best_prob, "pcg-nystrom", rank=32, max_iters=300, tol=1e-6,
+                 w0=w0)
+    assert warm.info["iters"] <= cold.info["iters"]
+    np.testing.assert_allclose(np.asarray(warm.w), np.asarray(cold.w),
+                               rtol=1e-3, atol=1e-4)
+    # back-compat: the plain call still returns just the problem
+    assert apply_best(prob, res).sigma == best_prob.sigma
+    # naive strategy has no stacked solution block to average
+    rn = tune(prob, strategy="naive", sigmas=(0.5,), lams=(1e-2,), folds=2,
+              rank=16, max_iters=60, tol=1e-4)
+    assert rn.best_w0 is None
+
+
+def test_loo_closed_form_matches_folds_n_cv():
+    # tune(folds=n) IS leave-one-out; the direct solver's closed-form LOO
+    # residuals from ONE Cholesky are its exact oracle
+    from repro.core.direct import loo_mse, loo_residuals
+
+    prob = _regression_problem(n=40, d=3)
+    rs = tune(prob, sigmas=(1.0,), lams=(1e-2, 1e-1), folds=40, rank=24,
+              max_iters=500, tol=1e-9, seed=0)
+    for rec in rs.records:
+        ref = loo_mse(KRRProblem(x=prob.x, y=prob.y, sigma=1.0,
+                                 lam_unscaled=rec["lam_unscaled"],
+                                 backend="xla"))
+        np.testing.assert_allclose(rec["cv_mse"], ref, rtol=2e-3)
+    # shape contract: (n,) residuals for a 1-D y, (n, t) for multi-head
+    assert loo_residuals(prob).shape == (40,)
+
+
 def test_tune_cli_smoke(tmp_path, capsys, monkeypatch):
     export = tmp_path / "best.json"
     monkeypatch.setattr(sys, "argv", [
