@@ -28,7 +28,7 @@ def main() -> None:
     import jax.numpy as jnp
 
     from repro.core.krr import KRRProblem
-    from repro.core.tuning import tune_multikernel
+    from repro.core.tune import tune_multikernel
 
     r = np.random.default_rng(0)
     n, d = 512, 6

@@ -1,18 +1,36 @@
-"""Tile-sharing tuning vs the naive per-candidate loop (docs/tuning.md).
+"""Tile-sharing tuning vs the naive per-candidate loop, and successive
+halving vs exhaustive grid (docs/tuning.md).
 
-The acceptance claim: a shared (sigma, lam, fold) sweep over s sigmas,
-l lambdas, k folds performs ~s kernel-tile sweeps' worth of matvec work —
-one stacked solve per sigma — where the naive loop pays for s*l*k
-independent solves.  Kernel work is counted in *sweeps* (full passes over
-the n x n tile grid, ``TuneResult.sweeps``); wall time is reported alongside.
+Two acceptance claims:
+
+  * **Sharing** — a shared (sigma, lam, fold) sweep over s sigmas, l
+    lambdas, k folds performs ~s kernel-tile sweeps' worth of matvec work —
+    one stacked solve per sigma — where the naive loop pays for s*l*k
+    independent solves.
+  * **Halving** — ``policy="halving"`` prunes losing lam columns at rungs
+    MID-SOLVE (``blocked_cg`` external freezing), so each sigma group's
+    stacked solve ends when the survivors converge instead of when the
+    slowest loser does: strictly fewer kernel sweeps than the exhaustive
+    grid at the SAME best config (enforced below, budget-checked).
+
+Kernel work is counted in *sweeps* (full passes over the n x n tile grid,
+``TuneResult.sweeps``); wall time is reported alongside.
 
 Emits:
 
     tuning_shared   — the stacked path, derived: sweeps + per-sigma budget
     tuning_naive    — per-(sigma, lam, fold) loop, derived: sweeps + ratio
+    tuning_grid     — exhaustive grid on the wide-lam testbed
+    tuning_halving  — successive halving, derived: sweeps + ratio + agreement
+
+Set ``BENCH_TUNING_SMOKE=1`` (the CI tier-1 bench smoke does) to shrink the
+problem and skip the slow naive reference loop while still enforcing the
+halving-vs-grid claim.
 """
 
 from __future__ import annotations
+
+import os
 
 import numpy as np
 
@@ -23,13 +41,18 @@ def main() -> None:
     import jax.numpy as jnp
 
     from repro.core.krr import KRRProblem
-    from repro.core.tuning import tune
+    from repro.core.tune import tune
 
+    smoke = os.environ.get("BENCH_TUNING_SMOKE", "") == "1"
     r = np.random.default_rng(0)
-    n, d = 768, 6
+    n, d = (320, 6) if smoke else (768, 6)
     s_sigmas, l_lams, k_folds = 3, 8, 5
     x = jnp.asarray(r.standard_normal((n, d)).astype(np.float32))
-    y = jnp.sin(2.0 * x[:, 0]) + 0.3 * jnp.cos(x[:, 1] * x[:, 2])
+    # observation noise puts the CV-optimal lam mid-grid (the realistic
+    # tuning regime): the sub-optimal tiny lams are then slow LOSERS —
+    # exactly what successive halving should prune
+    y = (jnp.sin(2.0 * x[:, 0]) + 0.3 * jnp.cos(x[:, 1] * x[:, 2])
+         + 0.3 * jnp.asarray(r.standard_normal(n).astype(np.float32)))
     prob = KRRProblem(x=x, y=y, backend="xla")
     # the lam floor keeps every (sigma, lam, fold) system solvable to tol
     # within the iteration budget on BOTH paths — an unconverged candidate
@@ -43,19 +66,13 @@ def main() -> None:
 
     results = {}
 
-    def run(strategy):
-        results[strategy] = tune(prob, strategy=strategy, **kw)
+    def run(name, **extra):
+        results[name] = tune(prob, **{**kw, **extra})
 
-    us_shared = timeit(lambda: run("shared"), iters=1, warmup=1)
-    us_naive = timeit(lambda: run("naive"), iters=1, warmup=0)
-    rs, rn = results["shared"], results["naive"]
-    if rs.best["sigma"] != rn.best["sigma"] or (
-        rs.best["lam_unscaled"] != rn.best["lam_unscaled"]
-    ):
-        raise RuntimeError(
-            f"shared and naive sweeps disagree on the best config: "
-            f"{rs.best} vs {rn.best}"
-        )
+    # -- sharing: stacked engine vs the naive per-candidate loop ------------
+    us_shared = timeit(lambda: run("shared", strategy="shared"),
+                       iters=1, warmup=1)
+    rs = results["shared"]
     iters = max(int(v) for v in rs.info["iters_by_sigma"].values())
     budget = s_sigmas * (iters + 3)  # sketch + warm start + scoring per sigma
     if rs.sweeps > budget + 1e-6:
@@ -65,15 +82,63 @@ def main() -> None:
         )
     emit("tuning_shared", us_shared,
          f"sweeps={rs.sweeps:.1f}_budget<=s*(iters+3)={budget}")
-    emit("tuning_naive", us_naive,
-         f"sweeps={rn.sweeps:.1f}_ratio={rn.sweeps / rs.sweeps:.1f}x")
-    note(f"s={s_sigmas} l={l_lams} k={k_folds}: shared {rs.sweeps:.1f} sweeps "
-         f"(~{rs.sweeps / s_sigmas:.0f}/sigma, {iters} CG iters) vs naive "
-         f"{rn.sweeps:.1f} ({rn.sweeps / rs.sweeps:.1f}x more kernel work; "
-         f"candidate count {rs.info['candidates']}, "
-         f"{s_sigmas * l_lams * k_folds} naive solves)")
-    note(f"wall: shared {us_shared / 1e6:.1f} s vs naive {us_naive / 1e6:.1f} s")
-    note("one stacked multi-RHS solve per sigma == the tile-sharing claim")
+    if smoke:
+        note("BENCH_TUNING_SMOKE=1: skipping the naive reference loop "
+             f"(s*l*k = {s_sigmas * l_lams * k_folds} independent solves)")
+    else:
+        us_naive = timeit(lambda: run("naive", strategy="naive"),
+                          iters=1, warmup=0)
+        rn = results["naive"]
+        if rs.best["sigma"] != rn.best["sigma"] or (
+            rs.best["lam_unscaled"] != rn.best["lam_unscaled"]
+        ):
+            raise RuntimeError(
+                f"shared and naive sweeps disagree on the best config: "
+                f"{rs.best} vs {rn.best}"
+            )
+        emit("tuning_naive", us_naive,
+             f"sweeps={rn.sweeps:.1f}_ratio={rn.sweeps / rs.sweeps:.1f}x")
+        note(f"s={s_sigmas} l={l_lams} k={k_folds}: shared {rs.sweeps:.1f} "
+             f"sweeps (~{rs.sweeps / s_sigmas:.0f}/sigma, {iters} CG iters) "
+             f"vs naive {rn.sweeps:.1f} ({rn.sweeps / rs.sweeps:.1f}x more "
+             f"kernel work; candidate count {rs.info['candidates']}, "
+             f"{s_sigmas * l_lams * k_folds} naive solves)")
+        note(f"wall: shared {us_shared / 1e6:.1f} s vs naive "
+             f"{us_naive / 1e6:.1f} s")
+
+    # -- halving vs grid: wide lam grid whose smallest lams are slow losers
+    # (worst-conditioned AND overfit) — the candidates halving should prune
+    # at the first rung instead of iterating to the budget
+    hkw = dict(kw, lams=tuple(np.geomspace(1e-8, 1e-1, l_lams)))
+    us_grid = timeit(lambda: run("grid", policy="grid", **hkw),
+                     iters=1, warmup=0)
+    us_halving = timeit(lambda: run("halving", policy="halving", **hkw),
+                        iters=1, warmup=0)
+    rg, rh = results["grid"], results["halving"]
+    if rg.best["sigma"] != rh.best["sigma"] or (
+        rg.best["lam_unscaled"] != rh.best["lam_unscaled"]
+    ):
+        raise RuntimeError(
+            f"halving and grid disagree on the best config: "
+            f"{rh.best} vs {rg.best}"
+        )
+    if not rh.sweeps < rg.sweeps:  # the budget claim, strictly enforced
+        raise RuntimeError(
+            f"halving consumed {rh.sweeps:.1f} sweeps, not strictly below "
+            f"the exhaustive grid's {rg.sweeps:.1f}"
+        )
+    pruned = sum(1 for t in rh.trace if t["pruned_at_rung"] is not None)
+    emit("tuning_grid", us_grid, f"sweeps={rg.sweeps:.1f}")
+    emit("tuning_halving", us_halving,
+         f"sweeps={rh.sweeps:.1f}_ratio={rg.sweeps / rh.sweeps:.1f}x_"
+         f"pruned={pruned}/{len(rh.trace)}_best_agrees")
+    note(f"halving: {rh.sweeps:.1f} sweeps vs grid {rg.sweeps:.1f} "
+         f"({rg.sweeps / rh.sweeps:.1f}x fewer), {pruned}/{len(rh.trace)} "
+         f"candidates pruned mid-solve, same best config "
+         f"(sigma={rh.best['sigma']:.3g}, lam={rh.best['lam_unscaled']:.3g})")
+    note(f"wall: grid {us_grid / 1e6:.1f} s vs halving {us_halving / 1e6:.1f} s")
+    note("one stacked multi-RHS solve per sigma == the tile-sharing claim; "
+         "halving ends each solve at the survivors' convergence")
 
 
 if __name__ == "__main__":

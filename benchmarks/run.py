@@ -7,7 +7,7 @@
 #   kernels   — fused kernel-matvec hot-spot microbench + Pallas tile analysis
 #   multirhs  — batched (n, t) one-vs-all solve vs t sequential solves
 #   dist      — sharded matvec/ASkotch iteration + tune() vs device count
-#   tuning    — tile-sharing (sigma, lam, fold) sweep vs naive s*l*k loop
+#   tuning    — tile-sharing sweep vs naive loop + halving-vs-grid policies
 #   multikernel — weight-axis sharing: q-kernel random search vs naive loop
 #
 # Scaled to CPU execution (the container is the oracle runtime; TPU numbers

@@ -1,6 +1,7 @@
 """The paper's primary contribution: Skotch/ASkotch approximate sketch-and-
 project solvers for full KRR, plus every baseline the paper compares against
-and the (sigma, lam) tuning subsystem that picks their hyperparameters.
+and the policy-driven (sigma, lam) tuning subsystem (``repro.core.tune``)
+that picks their hyperparameters.
 """
 
 from repro.core.askotch import ASkotchConfig, SolveResult, solve, solve_scan
@@ -14,10 +15,17 @@ from repro.core.solver_api import (
     MULTIKERNEL_TUNE_OPTIONS,
     TUNE_OPTIONS,
     SolveOutput,
-    tune,
 )
 from repro.core.solver_api import solve as solve_any
-from repro.core.tuning import TuneResult, apply_best, tune_multikernel
+from repro.core.tune import TuneResult, apply_best, tune_multikernel
+
+# Importing the repro.core.tune PACKAGE above binds the module object to the
+# ``tune`` attribute of this package; rebind the solver-API entry point last
+# so ``from repro.core import tune`` keeps meaning the function.  The package
+# stays importable through FROM-imports (``from repro.core.tune import X``,
+# resolved via sys.modules); attribute access after a plain ``import
+# repro.core.tune`` yields this function instead — use from-imports.
+from repro.core.solver_api import tune  # noqa: E402  (must stay below)
 
 __all__ = [
     "ASkotchConfig",

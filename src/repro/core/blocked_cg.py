@@ -1,12 +1,31 @@
 """Blocked (multi-RHS) preconditioned conjugate gradient.
 
 One CG loop shared by ``pcg.solve_pcg`` (full-K system, Nystrom/RPCholesky
-preconditioners) and ``falkon.solve_falkon`` (inducing-point system, plain CG
-on the Falkon-preconditioned operator).  Each of the t right-hand-side
-columns carries its own alpha/beta/residual; columns whose relative residual
-reaches ``tol`` are frozen (their search direction zeroed) while the rest
-continue — trajectories are identical to t independent CG runs, but every
-``matvec`` is one fused pass over all t columns.
+preconditioners), ``falkon.solve_falkon`` (inducing-point system, plain CG
+on the Falkon-preconditioned operator) and the tuning engine
+(``core/tune/engine.py``, one stacked solve per sigma group).  Each of the t
+right-hand-side columns carries its own alpha/beta/residual; columns whose
+relative residual reaches ``tol`` are frozen (their search direction zeroed)
+while the rest continue — trajectories are identical to t independent CG
+runs, but every ``matvec`` is one fused pass over all t columns.
+
+Two freezing mechanisms compose:
+
+  * **Convergence freezing** (always on): a column below ``tol`` stops
+    moving; the solve ends when every column is below ``tol``.
+  * **External freezing** (``freeze_at``/``freeze_callback``): at chosen
+    iterations — the *rungs* of a successive-halving search — a callback
+    inspects the current block and may freeze additional columns (losing
+    tuning candidates).  Externally frozen columns keep their prune-time
+    values and are excluded from the convergence requirement; if every
+    column ends up frozen (externally or by convergence) the loop exits
+    early.  Because each column's alpha/beta depend only on its own data,
+    freezing one column never perturbs the trajectory of another.
+
+All-zero RHS columns (a one-vs-all head with no positives in a fold, say)
+are frozen at iteration 0 with ``rel_residual_per_head = 0`` — the exact
+solution of ``A x = 0`` is ``x = 0`` for SPD ``A`` — instead of riding the
+loop and risking 0/0 in the per-column scalars.
 """
 
 from __future__ import annotations
@@ -19,6 +38,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+#: signature of the external-freeze hook: ``(it, x, rel_heads, frozen) ->
+#: bool mask of columns to freeze now (or None)``; ``frozen`` is the
+#: cumulative external-freeze mask so far and the returned mask is OR-ed in.
+FreezeCallback = Callable[
+    [int, jax.Array, np.ndarray, np.ndarray], "np.ndarray | None"
+]
+
 
 @dataclasses.dataclass
 class BlockedCGResult:
@@ -26,6 +52,9 @@ class BlockedCGResult:
     iters: int
     history: list[dict]
     converged: bool
+    #: (t,) bool — columns frozen externally (freeze_callback / zero RHS);
+    #: their x columns hold the value at freeze time
+    frozen: np.ndarray | None = None
 
 
 def blocked_cg(
@@ -38,36 +67,66 @@ def blocked_cg(
     tol: float = 1e-8,
     t0: float | None = None,
     time_budget_s: float | None = None,
+    freeze_at: "tuple[int, ...] | list[int] | None" = None,
+    freeze_callback: FreezeCallback | None = None,
 ) -> BlockedCGResult:
     """Solve A X = RHS column-blocked, RHS of shape (p, t).
 
     ``x0`` warm-starts the iteration (one extra ``matvec`` to form the
     initial residual; default is the zero start, which costs none).  History
     records carry ``rel_residual`` (aggregate ||R||_F / ||RHS||_F) and
-    ``rel_residual_per_head``; convergence requires every column below
-    ``tol`` (relative to its own RHS column norm).
+    ``rel_residual_per_head``; convergence requires every non-frozen column
+    below ``tol`` (relative to its own RHS column norm).
+
+    ``freeze_at`` is a collection of iteration numbers (rungs); after each
+    listed iteration completes, ``freeze_callback(it, x, rel_heads, frozen)``
+    runs and may return a (t,) bool mask of columns to freeze externally —
+    those columns stop moving (their search direction and scalars zero) but
+    keep their current x values, exactly as if they had converged.  Columns
+    whose RHS is identically zero are externally frozen at iteration 0 with
+    ``rel_residual_per_head = 0``.  ``result.frozen`` reports the final
+    external-freeze mask; ``converged`` stays the strict all-columns-below-
+    tol statement.
     """
     t0 = time.perf_counter() if t0 is None else t0
     tiny = jnp.finfo(rhs.dtype).tiny
-    rhs_norm = jnp.maximum(jnp.linalg.norm(rhs, axis=0), tiny)  # (t,)
+    rhs_norm_raw = jnp.linalg.norm(rhs, axis=0)  # (t,) true norms, may be 0
+    rhs_norm = jnp.maximum(rhs_norm_raw, tiny)
     rhs_norm_np = np.asarray(rhs_norm)
     rhs_norm_f = max(float(np.sqrt((rhs_norm_np**2).sum())), float(tiny))
+    # all-zero RHS columns: the solution is exactly 0 — freeze them at
+    # iteration 0 instead of letting 0/0 scalars decide
+    ext_frozen = np.asarray(rhs_norm_raw) == 0.0  # (t,) cumulative mask
+    rungs = frozenset(int(i) for i in freeze_at) if freeze_at else frozenset()
+    if ext_frozen.any():
+        live = jnp.asarray(~ext_frozen, rhs.dtype)
+        rhs = rhs * live
+        if x0 is not None:
+            x0 = x0 * live
     if x0 is None:
         x = jnp.zeros_like(rhs)
         r = rhs  # residual for x0 = 0
     else:
         x = x0
         r = rhs - matvec(x0)
+    history: list[dict] = []
+    converged = bool(ext_frozen.all())
+    if converged:  # every column zero: nothing to solve
+        return BlockedCGResult(
+            x=x, iters=0, history=history, converged=True, frozen=ext_frozen
+        )
     z = pinv(r) if pinv is not None else r
     p = z
     rz = jnp.sum(r * z, axis=0)  # (t,) per-column <r, z>
-    history: list[dict] = []
-    converged = False
+    if ext_frozen.any():
+        gate = jnp.asarray(~ext_frozen, rz.dtype)
+        p = p * gate
+        rz = rz * gate
     it = 0
     for it in range(1, max_iters + 1):
         ap = matvec(p)  # one fused pass for all t columns
         pap = jnp.sum(p * ap, axis=0)
-        # frozen (converged) columns get alpha = 0 and stop moving
+        # frozen (converged or external) columns get alpha = 0 and stop moving
         active = rz > 0
         alpha = jnp.where(active, rz / jnp.where(active, pap, 1.0), 0.0)
         x = x + alpha * p
@@ -75,6 +134,9 @@ def blocked_cg(
         # ONE device->host transfer per iteration: column norms; the
         # aggregate Frobenius residual derives from them on the host
         col_norms = np.asarray(jnp.linalg.norm(r, axis=0))
+        # zero-RHS columns have exactly-zero residuals (their rhs/x0 were
+        # zeroed above), so they report rel = 0 without special-casing;
+        # externally PRUNED columns keep their true (stale) residual
         rel_heads_np = col_norms / rhs_norm_np
         rel = float(np.sqrt((col_norms**2).sum())) / rhs_norm_f
         history.append({
@@ -83,16 +145,27 @@ def blocked_cg(
             "rel_residual_per_head": rel_heads_np.tolist(),
             "time_s": time.perf_counter() - t0,
         })
-        if bool((rel_heads_np < tol).all()):
+        below = rel_heads_np < tol
+        if bool(below.all()):
             converged = True
+            break
+        if freeze_callback is not None and it in rungs:
+            new_frozen = freeze_callback(it, x, rel_heads_np, ext_frozen)
+            if new_frozen is not None:
+                ext_frozen = ext_frozen | np.asarray(new_frozen, bool)
+        # a frozen column (converged or external) is done; exit when none left
+        if bool((below | ext_frozen).all()):
             break
         z = pinv(r) if pinv is not None else r
         rz_new = jnp.sum(r * z, axis=0)
-        # zero the search direction of columns already below tol
-        keep = jnp.asarray(rel_heads_np >= tol, rz_new.dtype)
+        # zero the search direction of columns below tol or frozen externally
+        keep = jnp.asarray((rel_heads_np >= tol) & ~ext_frozen, rz_new.dtype)
         beta = jnp.where(active, rz_new / jnp.where(active, rz, 1.0), 0.0)
         p = (z + beta * p) * keep
         rz = rz_new * keep
         if time_budget_s is not None and time.perf_counter() - t0 > time_budget_s:
             break
-    return BlockedCGResult(x=x, iters=it, history=history, converged=converged)
+    return BlockedCGResult(
+        x=x, iters=it, history=history, converged=converged,
+        frozen=ext_frozen if ext_frozen.any() else None,
+    )

@@ -19,7 +19,7 @@ direct — and the serving layer run multi-kernel unchanged; a
 ``ShardedKernelOperator`` composes with it for mesh runs (its per-shard
 ``local_op`` goes through :func:`make_operator`).
 
-Two extra primitives serve the multi-kernel tuner (``core.tuning.
+Two extra primitives serve the multi-kernel tuner (``repro.core.tune.
 tune_multikernel``):
 
   * ``matvec_cols(v, w_cols)`` — per-COLUMN weight vectors (q, t): column c

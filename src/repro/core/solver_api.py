@@ -84,9 +84,14 @@ DIST_METHOD_OPTIONS: dict[str, tuple[str, ...]] = {
 }
 
 #: accepted keyword options of tune() — same fail-fast contract as
-#: METHOD_OPTIONS (unknown options raise with the accepted list)
+#: METHOD_OPTIONS (unknown options raise with the accepted list).
+#: ``policy`` ("grid" | "random" | "halving" or a SearchPolicy instance),
+#: ``halving_eta`` and ``sigma_continuation`` select the search policy over
+#: the stacked engine (repro.core.tune); ``search``/``num_samples`` remain
+#: the legacy grid/random spelling.
 TUNE_OPTIONS: tuple[str, ...] = (
-    "sigmas", "lams", "folds", "search", "num_samples", "strategy",
+    "sigmas", "lams", "folds", "search", "num_samples", "policy",
+    "halving_eta", "sigma_continuation", "strategy",
     "rank", "max_iters", "tol", "seed", "warm_start",
 )
 
@@ -95,8 +100,8 @@ TUNE_OPTIONS: tuple[str, ...] = (
 #: passed or the problem's kernel is a tuple
 MULTIKERNEL_TUNE_OPTIONS: tuple[str, ...] = (
     "kernels", "sigmas", "lams", "folds", "n_weight_samples", "weights",
-    "dirichlet_alpha", "strategy", "rank", "max_iters", "tol", "seed",
-    "warm_start",
+    "dirichlet_alpha", "policy", "halving_eta", "sigma_continuation",
+    "strategy", "rank", "max_iters", "tol", "seed", "warm_start",
 )
 
 
@@ -163,13 +168,17 @@ def _solve_dist(problem: KRRProblem, method: str, mesh, kw: dict) -> SolveOutput
 
 def tune(problem: KRRProblem, *, mesh=None, **kw):
     """Hyperparameter search over (sigma, lam) with k-fold CV — the
-    tile-sharing sweep of ``core.tuning`` behind the solver-API contract.
+    policy-driven tile-sharing sweep of ``repro.core.tune`` behind the
+    solver-API contract.
 
     The search grows a WEIGHT axis when the problem is multi-kernel: pass
     ``kernels=("rbf", "laplacian", ...)`` (or a problem whose ``kernel`` is
     already a tuple) and the sweep becomes himalaya-style random search over
     convex kernel combinations — every (weight, lam, fold, head) candidate
-    rides the same stacked solve (``core.tuning.tune_multikernel``).
+    rides the same stacked solve (``repro.core.tune.tune_multikernel``).
+    ``policy="halving"`` prunes losing candidates at rungs mid-solve and
+    ``sigma_continuation=True`` seeds each sigma group from the previous
+    one — both run unchanged over a mesh.
 
     Args:
       problem: data container (``x``/``y``/``kernel``/``backend`` used;
@@ -177,7 +186,8 @@ def tune(problem: KRRProblem, *, mesh=None, **kw):
       mesh: optional ``jax.sharding.Mesh``; candidates then run over the
         ``ShardedKernelOperator`` path, same as ``solve(..., mesh=...)``.
       **kw: any of :data:`TUNE_OPTIONS` (``sigmas``, ``lams``, ``folds``,
-        ``search``, ``num_samples``, ``strategy``, ``rank``, ``max_iters``,
+        ``search``, ``num_samples``, ``policy``, ``halving_eta``,
+        ``sigma_continuation``, ``strategy``, ``rank``, ``max_iters``,
         ``tol``, ``seed``, ``warm_start``) — or, on the multi-kernel path,
         :data:`MULTIKERNEL_TUNE_OPTIONS` (adds ``kernels``,
         ``n_weight_samples``, ``weights``, ``dirichlet_alpha``; drops
@@ -185,8 +195,9 @@ def tune(problem: KRRProblem, *, mesh=None, **kw):
         the accepted list.
 
     Returns:
-      A :class:`repro.core.tuning.TuneResult`; refit with
-      ``solve(tuning.apply_best(problem, result), method)`` and serve the
+      A :class:`repro.core.tune.TuneResult` (``trace`` carries the
+      per-candidate audit trail); refit with
+      ``solve(apply_best(problem, result), method)`` and serve the
       exported ``result.best`` config via ``serving.krr_serve.
       make_krr_predict_fn_from_config``.
     """
@@ -202,11 +213,14 @@ def tune(problem: KRRProblem, *, mesh=None, **kw):
             f"unknown option(s) {unknown} for {kind}; "
             f"accepted: {sorted(accepted)}"
         )
-    from repro.core import tuning  # lazy: keeps solve()-only imports light
+    # lazy: keeps solve()-only imports light (imports the tune PACKAGE —
+    # ``repro.core.tune`` the attribute is this very function)
+    from repro.core.tune import tune as _tune
+    from repro.core.tune import tune_multikernel as _tune_multikernel
 
     if multikernel:
-        return tuning.tune_multikernel(problem, mesh=mesh, **kw)
-    return tuning.tune(problem, mesh=mesh, **kw)
+        return _tune_multikernel(problem, mesh=mesh, **kw)
+    return _tune(problem, mesh=mesh, **kw)
 
 
 def solve(problem: KRRProblem, method: str = "askotch", *, mesh=None, **kw) -> SolveOutput:

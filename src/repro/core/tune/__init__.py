@@ -1,0 +1,105 @@
+"""Tile-sharing hyperparameter tuning: policy-driven (sigma[, weight], lam)
+search with k-fold CV.
+
+ASkotch's headline results all sit behind a (kernel, sigma, lam) choice;
+this package is the machinery that makes it, split into two layers
+(docs/tuning.md):
+
+  * **Engine** (``engine.py``) — one stacked blocked-CG per sigma group.
+    Folds are column masks, lambdas are per-column diagonal shifts, one
+    Nystrom sketch per sigma preconditions and warm-starts every column
+    (Diaz et al. 2023's shift-invariant observation), and multi-kernel
+    weight candidates are per-column weight vectors on the fused
+    multi-kernel matvec.  The single-kernel path is the q = 1 degenerate
+    case of the multi-kernel one — one code path for both.
+  * **Policies** (``policies.py``) — ``GridSearch`` / ``RandomSearch``
+    (reproduce the classic sweeps exactly) and ``SuccessiveHalving``
+    (prunes losing candidates at rungs MID-SOLVE via ``blocked_cg``'s
+    external column freezing, so the stacked solve ends when the survivors
+    converge).  ``sigma_continuation=`` additionally seeds each sigma
+    group's sketch and iterate block from the previous group's result.
+
+So for s sigmas, l lambdas, k folds, and t one-vs-all heads, the whole sweep
+runs s stacked solves over ``l*k*t`` columns each: total kernel-tile work is
+~s solves' worth instead of the naive ``s*l*k`` (``benchmarks/
+bench_tuning.py`` measures it, and measures halving below grid; ``TuneResult.
+sweeps`` carries the count).
+
+Quickstart (the full walkthrough lives in docs/tuning.md):
+
+>>> import numpy as np
+>>> import jax.numpy as jnp
+>>> from repro.core.krr import KRRProblem
+>>> from repro.core.tune import tune
+>>> r = np.random.default_rng(0)
+>>> x = jnp.asarray(r.standard_normal((64, 3)).astype(np.float32))
+>>> y = jnp.sin(2.0 * x[:, 0]) + 0.1 * x[:, 1]
+>>> res = tune(KRRProblem(x=x, y=y), sigmas=(0.5, 2.0),
+...            lams=(1e-3, 1e-2, 1e-1), folds=3, rank=16, max_iters=60, seed=0)
+>>> sorted(res.best)
+['backend', 'cv_mse', 'folds', 'kernel', 'lam_unscaled', 'sigma']
+>>> res.best["sigma"] in (0.5, 2.0) and res.best["lam_unscaled"] in (1e-3, 1e-2, 1e-1)
+True
+>>> len(res.records)  # one record per (sigma, lam) candidate
+6
+>>> res.sweeps < res.info["naive_sweep_estimate"]  # shared < the l*k loop
+True
+>>> len(res.trace) == len(res.records)  # the audit trail rides along
+True
+
+The same entry points drive successive halving and sigma-continuation:
+
+>>> res_h = tune(KRRProblem(x=x, y=y), sigmas=(0.5, 2.0),
+...              lams=(1e-3, 1e-2, 1e-1), folds=3, rank=16, max_iters=60,
+...              seed=0, policy="halving", sigma_continuation=True)
+>>> res_h.search
+'halving'
+"""
+
+from repro.core.tune.api import (
+    SEARCHES,
+    STRATEGIES,
+    TuneResult,
+    apply_best,
+    run_search,
+    tune,
+    tune_multikernel,
+)
+from repro.core.tune.engine import (
+    Continuation,
+    GroupResult,
+    SigmaGroup,
+    SweepCounter,
+    solve_sigma_group,
+)
+from repro.core.tune.policies import (
+    POLICIES,
+    GridSearch,
+    RandomSearch,
+    SearchPolicy,
+    SuccessiveHalving,
+    TuneSpace,
+    make_policy,
+)
+
+__all__ = [
+    "Continuation",
+    "GridSearch",
+    "GroupResult",
+    "POLICIES",
+    "RandomSearch",
+    "SEARCHES",
+    "STRATEGIES",
+    "SearchPolicy",
+    "SigmaGroup",
+    "SuccessiveHalving",
+    "SweepCounter",
+    "TuneResult",
+    "TuneSpace",
+    "apply_best",
+    "make_policy",
+    "run_search",
+    "solve_sigma_group",
+    "tune",
+    "tune_multikernel",
+]

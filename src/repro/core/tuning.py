@@ -1,928 +1,37 @@
-"""Tile-sharing hyperparameter tuning: (sigma, lam) search with k-fold CV.
+"""Deprecated shim — the tuning monolith moved to the ``repro.core.tune``
+package (PR 5: engine/policy split).
 
-ASkotch's headline results all sit behind a (kernel, sigma, lam) choice; this
-module is the machinery that makes it.  The engineering rule is that
-candidates share kernel work instead of multiplying it (docs/tuning.md):
+``core/tuning.py`` grew into a 900-line monolith with near-duplicate
+single- and multi-kernel code paths; it is now:
 
-  * **Folds are column masks.**  The fold-j training system
-    ``(K_j + lam I) w = y_j`` embeds into the full n x n operator as the
-    block-diagonal system ``(M_j K M_j + lam I) w = M_j y`` with
-    ``M_j = diag(fold-j train mask)`` — off-mask coordinates decouple to
-    ``lam w = 0``.  Masked iterates stay masked, so every fold rides the SAME
-    fused kernel tiles as every other fold.
-  * **Lambdas are per-column diagonal shifts.**  Columns of one blocked-CG
-    solve may each carry their own shift ``lam_c``; the kernel matvec
-    ``K @ V`` is one fused pass over all columns, the shift is elementwise.
-  * **One Nystrom sketch per sigma.**  The rank-r sketch of ``K`` does not
-    depend on lam (Diaz et al. 2023's shift-invariant preconditioner
-    observation), so a single ``K @ Omega`` pass preconditions — and
-    Woodbury-warm-starts — every (lam, fold) column.
+  * ``repro.core.tune.engine`` — the stacked per-sigma solve (fold masks,
+    column assembly, sketch + lam-damped preconditioning, sweep accounting),
+    single-kernel as the q = 1 degenerate case of multi-kernel.
+  * ``repro.core.tune.policies`` — GridSearch / RandomSearch /
+    SuccessiveHalving behind the ``SearchPolicy`` protocol.
+  * ``repro.core.tune.api`` — ``tune`` / ``tune_multikernel`` /
+    ``apply_best`` / ``TuneResult``.
 
-So for s sigmas, l lambdas, k folds, and t one-vs-all heads, the whole sweep
-runs s stacked solves over ``l*k*t`` columns each: total kernel-tile work is
-~s solves' worth instead of the naive ``s*l*k`` (``benchmarks/
-bench_tuning.py`` measures it; ``TuneResult.sweeps`` carries the count).
-
-:func:`tune_multikernel` extends the engine with a WEIGHT axis — himalaya-
-style random search over convex kernel combinations ``sum_i w_i K_i``:
-every weight candidate contributes ``l*k*t`` more columns carrying its own
-per-column weight vector (the fused multi-kernel matvec makes a q-kernel
-pass cost ONE data sweep), and the per-kernel Nystrom sketches from one
-``sketch_components`` sweep combine per candidate for preconditioning and
-warm starts.  A c-candidate weight search costs ~1 solve's kernel work per
-sigma (``benchmarks/bench_multikernel.py``).
-
-Quickstart (the full walkthrough lives in docs/tuning.md):
-
->>> import numpy as np
->>> import jax.numpy as jnp
->>> from repro.core.krr import KRRProblem
->>> from repro.core.tuning import tune
->>> r = np.random.default_rng(0)
->>> x = jnp.asarray(r.standard_normal((64, 3)).astype(np.float32))
->>> y = jnp.sin(2.0 * x[:, 0]) + 0.1 * x[:, 1]
->>> res = tune(KRRProblem(x=x, y=y), sigmas=(0.5, 2.0),
-...            lams=(1e-3, 1e-2, 1e-1), folds=3, rank=16, max_iters=60, seed=0)
->>> sorted(res.best)
-['backend', 'cv_mse', 'folds', 'kernel', 'lam_unscaled', 'sigma']
->>> res.best["sigma"] in (0.5, 2.0) and res.best["lam_unscaled"] in (1e-3, 1e-2, 1e-1)
-True
->>> len(res.records)  # one record per (sigma, lam) candidate
-6
->>> res.sweeps < res.info["naive_sweep_estimate"]  # shared < the l*k loop
-True
+Every public name is re-exported here so existing imports keep working;
+new code should import from :mod:`repro.core.tune`.
 """
 
-from __future__ import annotations
-
-import dataclasses
-from typing import Any, Sequence
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.blocked_cg import blocked_cg
-from repro.core.krr import KRRProblem, scaled_lam
-from repro.core.nystrom import NystromFactors, nystrom_from_sketch
-from repro.core.operator import as_multirhs
-
-SEARCHES = ("grid", "random")
-STRATEGIES = ("shared", "naive")
-
-
-@dataclasses.dataclass
-class SweepCounter:
-    """Kernel-pair-evaluation tally.
-
-    ``pairs`` counts (row, col) kernel evaluations touched by matvec work; a
-    multi-RHS matvec touches the same tiles as a single-RHS one, so the
-    natural unit is a *sweep* = one full pass over the n x n tile grid
-    (``pairs / n**2``).  This is the cost model docs/tuning.md accounts in.
-    """
-
-    pairs: float = 0.0
-
-    def add_matvec(self, rows: int, cols: int, count: int = 1) -> None:
-        self.pairs += float(rows) * float(cols) * count
-
-    def sweeps(self, n: int) -> float:
-        return self.pairs / float(n) ** 2
-
-
-@dataclasses.dataclass
-class TuneResult:
-    """Outcome of a (sigma, lam) sweep with k-fold CV.
-
-    Attributes:
-      best: JSON-able best-config dict — ``kernel``, ``sigma``,
-        ``lam_unscaled``, ``backend``, ``folds``, ``cv_mse`` — consumable by
-        :func:`repro.serving.krr_serve.make_krr_predict_fn_from_config` and
-        :func:`apply_best`.
-      best_score: the winning mean CV validation MSE (lower is better).
-      records: one dict per evaluated candidate: ``sigma``, ``lam_unscaled``,
-        ``cv_mse``, ``fold_mse`` (length-k list), and ``cv_acc`` (top-1
-        one-vs-all accuracy) when the problem has t > 1 heads.
-      folds / search / strategy: the sweep configuration actually run.
-      sweeps: kernel-tile sweep equivalents consumed (see
-        :class:`SweepCounter`); the tile-sharing claim is ``sweeps`` staying
-        ~s solves' worth for an s-sigma grid.
-      info: extras — ``pairs``, ``n``, ``t``, ``candidates``,
-        ``naive_sweep_estimate`` (what the per-candidate loop would cost),
-        per-sigma iteration counts.
-      best_w0: fold-averaged weights of the winning candidate (the
-        mask-supported mean of its k CV fold solutions; (n,) or (n, t)) —
-        the refit warm start ``apply_best`` can thread to the solver.  None
-        for the naive strategy (its fold solves are discarded).
-    """
-
-    best: dict[str, Any]
-    best_score: float
-    records: list[dict[str, Any]]
-    folds: int
-    search: str
-    strategy: str
-    sweeps: float
-    info: dict[str, Any]
-    best_w0: np.ndarray | None = None
-
-
-def apply_best(problem: KRRProblem, result: TuneResult, *, with_w0: bool = False):
-    """Return ``problem`` re-parameterized with the tuned best config —
-    the refit step of tune -> refit -> serve.
-
-    For a multi-kernel sweep (``result.best`` carries ``weights``) the
-    returned problem gets the kernel tuple and winning weight vector too.
-    With ``with_w0=True`` returns ``(problem, w0)`` where ``w0`` is the
-    fold-averaged CV solution of the winning candidate ((n,) or (n, t), or
-    None under the naive strategy) — pass it as the solver's warm start
-    (``solve(..., w0=w0)``) instead of starting from zero (ROADMAP item).
-    """
-    rep: dict[str, Any] = {
-        "sigma": result.best["sigma"],
-        "lam_unscaled": float(result.best["lam_unscaled"]),
-    }
-    if isinstance(rep["sigma"], (tuple, list)):
-        rep["sigma"] = tuple(float(s) for s in rep["sigma"])
-    else:
-        rep["sigma"] = float(rep["sigma"])
-    if "weights" in result.best:
-        rep["kernel"] = tuple(result.best["kernel"])
-        rep["weights"] = tuple(float(w) for w in result.best["weights"])
-    refit = dataclasses.replace(problem, **rep)
-    if with_w0:
-        return refit, result.best_w0
-    return refit
-
-
-def _fold_avg_w0(
-    w_cols: np.ndarray, col0: int, folds: int, t: int, squeeze: bool
-) -> np.ndarray:
-    """Mask-supported mean of one candidate's k fold solutions.
-
-    ``w_cols`` is the stacked solve's (n, C) solution block; the candidate's
-    fold-j/head-h column sits at ``col0 + j*t + h``.  Off-mask rows of each
-    column are exactly zero (the masked system decouples to ``lam w = 0``),
-    and every row is on-mask in exactly ``k - 1`` folds, so the mean over its
-    supporting folds is the column sum divided by ``k - 1``.
-    """
-    block = w_cols[:, col0 : col0 + folds * t]
-    w0 = block.reshape(block.shape[0], folds, t).sum(axis=1) / max(folds - 1, 1)
-    return w0[:, 0] if squeeze else w0
-
-
-# ---------------------------------------------------------------------------
-# candidate + fold construction
-# ---------------------------------------------------------------------------
-
-
-def _candidates(
-    sigmas: Sequence[float],
-    lams: Sequence[float],
-    search: str,
-    num_samples: int | None,
-    rng: np.random.Generator,
-) -> list[tuple[float, float]]:
-    grid = [(float(s), float(l)) for s in sigmas for l in lams]
-    if search == "grid":
-        if num_samples is not None:
-            raise ValueError(
-                "num_samples only applies to search='random'; grid search "
-                "always runs the full cross product"
-            )
-        return grid
-    k = len(grid) if num_samples is None else min(int(num_samples), len(grid))
-    if k < 1:
-        raise ValueError("random search needs num_samples >= 1")
-    picks = rng.choice(len(grid), size=k, replace=False)
-    return [grid[i] for i in sorted(picks)]
-
-
-def _make_folds(n: int, folds: int, rng: np.random.Generator) -> list[np.ndarray]:
-    """Shuffled index sets of the k validation folds (near-equal sizes)."""
-    perm = rng.permutation(n)
-    return [np.sort(f) for f in np.array_split(perm, folds)]
-
-
-# ---------------------------------------------------------------------------
-# shared (tile-sharing) engine — one stacked solve per sigma
-# ---------------------------------------------------------------------------
-
-
-def _operator_for(problem: KRRProblem, sigma: float, mesh, weights=None) -> Any:
-    """Operator for one sigma candidate — local or mesh-bound; ``weights``
-    re-weights a multi-kernel problem's combination (naive reference loop)."""
-    if mesh is None:
-        rep: dict[str, Any] = {"sigma": float(sigma)}
-        if weights is not None:
-            rep["weights"] = tuple(float(w) for w in weights)
-        return dataclasses.replace(problem.op, **rep)
-    from repro.distributed.sharded_operator import ShardedKernelOperator
-
-    return ShardedKernelOperator.bind(
-        mesh, problem.x, kernel=problem.kernel, sigma=float(sigma),
-        backend=problem.backend, weights=weights,
-    )
-
-
-def _place(op: Any, arr: np.ndarray) -> jax.Array:
-    """Device-put row-aligned host data, row-sharded when ``op`` is mesh-aware."""
-    a = jnp.asarray(arr)
-    if hasattr(op, "sharding"):
-        return jax.device_put(a, op.sharding(a.ndim))
-    return a
-
-
-def _sigma_sketch(
-    op: Any, rank: int, seed: int, counter: SweepCounter
-) -> NystromFactors:
-    """ONE rank-r Nystrom sketch of K(sigma) — reused by every (lam, fold)
-    column's preconditioner and warm start (the shift-invariant observation)."""
-    rng = np.random.default_rng(seed)
-    omega = _place(op, rng.standard_normal((op.n, rank)).astype(np.float32))
-    omega, _ = jnp.linalg.qr(omega)
-    sketch = op.sketch(omega)
-    counter.add_matvec(op.n, op.n)
-    return nystrom_from_sketch(sketch, omega, op.trace_est())
-
-
-def _tune_one_sigma_shared(
-    op: Any,
-    y2: np.ndarray,
-    lam_list: list[float],
-    val_folds: list[np.ndarray],
-    *,
-    rank: int,
-    max_iters: int,
-    tol: float,
-    seed: int,
-    warm_start: bool,
-    counter: SweepCounter,
-) -> tuple[np.ndarray, int, np.ndarray]:
-    """Solve ALL (lam, fold, head) systems for one sigma in ONE stacked
-    blocked-CG: columns ordered ``c = (lam_i * k + fold_j) * t + head_h``.
-
-    Returns ``(preds, iters, w_cols)`` with preds (n, C) = K @ W host-side —
-    row i of column (lam_i, fold_j, head_h) is the fold-j model's prediction
-    at x[i] (exact at validation rows, where w is zero by the mask) — and
-    ``w_cols`` (n, C) the solution block itself (mask-supported fold weights;
-    the refit warm start averages the winner's columns).
-    """
-    n, t = y2.shape
-    k = len(val_folds)
-    l = len(lam_list)
-
-    fold_mask = np.ones((n, k), np.float32)
-    for j, val in enumerate(val_folds):
-        fold_mask[val, j] = 0.0
-    n_train = [n - len(val) for val in val_folds]
-
-    # columns: lam outer, fold middle, head inner
-    masks_cols = np.tile(np.repeat(fold_mask, t, axis=1), (1, l))  # (n, l*k*t)
-    rhs = np.tile(
-        (fold_mask[:, :, None] * y2[:, None, :]).reshape(n, k * t), (1, l)
-    )
-    lam_cols = np.repeat(
-        np.asarray(
-            [scaled_lam(n_train[j], lam_u) for lam_u in lam_list for j in range(k)],
-            np.float32,
-        ),
-        t,
-    )  # (l*k,) -> (l*k*t,)
-
-    masks_d = _place(op, masks_cols)
-    rhs_d = _place(op, rhs)
-    lam_d = jnp.asarray(lam_cols)
-
-    f = _sigma_sketch(op, rank, seed, counter)
-    # damped rho per column; coefficients are O(r * C) scalars — lam-dependent
-    # parts of the preconditioner cost nothing against the shared sketch
-    rho = lam_d + f.lam[-1]
-    coeff = (f.lam[-1] + rho)[None, :] / (f.lam[:, None] + rho[None, :])  # (r, C)
-
-    @jax.jit
-    def matvec(v: jax.Array) -> jax.Array:
-        # one fused kernel pass over ALL columns; mask + shift are elementwise
-        return masks_d * op.matvec(masks_d * v) + lam_d * v
-
-    @jax.jit
-    def pinv(r_blk: jax.Array) -> jax.Array:
-        # residuals are mask-supported by construction, so masking the output
-        # makes this exactly the restricted (SPD) Nystrom preconditioner
-        utv = f.u.T @ r_blk
-        return masks_d * (f.u @ (coeff * utv) + (r_blk - f.u @ utv))
-
-    x0 = None
-    if warm_start:
-
-        @jax.jit
-        def _warm(rhs_in: jax.Array) -> jax.Array:
-            # Woodbury apply of the Nystrom approximation of (K + lam I)^{-1}
-            # (Eq. (15)), per-column rho = lam_c — zero extra kernel sweeps
-            utg = f.u.T @ rhs_in
-            core = utg / (f.lam[:, None] + lam_d[None, :])
-            return masks_d * (f.u @ core + (rhs_in - f.u @ utg) / lam_d)
-
-        x0 = _warm(rhs_d)
-
-    res = blocked_cg(matvec, rhs_d, pinv, x0=x0, max_iters=max_iters, tol=tol)
-    counter.add_matvec(n, n, res.iters + (1 if x0 is not None else 0))
-
-    preds = op.matvec(res.x)  # scoring: ONE more sweep serves every candidate
-    counter.add_matvec(n, n)
-    return np.asarray(preds), res.iters, np.asarray(res.x)
-
-
-# ---------------------------------------------------------------------------
-# naive reference engine — one solve per (sigma, lam, fold)
-# ---------------------------------------------------------------------------
-
-
-def _tune_one_candidate_naive(
-    problem: KRRProblem,
-    sigma: float,
-    lam_u: float,
-    val_folds: list[np.ndarray],
-    *,
-    rank: int,
-    max_iters: int,
-    tol: float,
-    seed: int,
-    counter: SweepCounter,
-    mesh=None,
-    weights=None,
-) -> list[np.ndarray]:
-    """The loop the shared path replaces: an independent Nystrom-PCG solve
-    per fold, each with its own sketch.  Returns per-fold validation
-    predictions (len(val), t).  ``weights`` makes the candidate a weighted
-    kernel combination (the multi-kernel naive reference)."""
-    n = problem.n
-    x_np = np.asarray(problem.x)
-    y2, _ = as_multirhs(problem.y)
-    y_np = np.asarray(y2)
-    base_op = _operator_for(problem, sigma, mesh, weights=weights)
-    out = []
-    for j, val in enumerate(val_folds):
-        train = np.setdiff1d(np.arange(n), val)
-        op_f = base_op.restrict(jnp.asarray(train))
-        n_f = len(train)
-        lam_f = scaled_lam(n_f, lam_u)
-        f = _sigma_sketch(op_f, min(rank, n_f), seed, SweepCounter())
-        counter.add_matvec(n_f, n_f)  # the per-candidate sketch is NOT shared
-        rho = lam_f + f.lam[-1]
-        coeff = (f.lam[-1] + rho) / (f.lam + rho)
-
-        @jax.jit
-        def matvec(v, op_f=op_f, lam_f=lam_f):
-            return op_f.matvec(v) + lam_f * v
-
-        @jax.jit
-        def pinv(r_blk, f=f, coeff=coeff):
-            utv = f.u.T @ r_blk
-            return f.u @ (coeff[:, None] * utv) + (r_blk - f.u @ utv)
-
-        rhs = jnp.asarray(y_np[train])
-        res = blocked_cg(matvec, rhs, pinv, max_iters=max_iters, tol=tol)
-        counter.add_matvec(n_f, n_f, res.iters)
-        pred_val = op_f.row_block_matvec(jnp.asarray(x_np[val]), res.x)
-        counter.add_matvec(len(val), n_f)
-        out.append(np.asarray(pred_val))
-    return out
-
-
-# ---------------------------------------------------------------------------
-# scoring + entry point
-# ---------------------------------------------------------------------------
-
-
-def _score_fold(pred: np.ndarray, truth: np.ndarray) -> tuple[float, float]:
-    """(mse, top1-accuracy) of validation predictions vs targets, all heads."""
-    mse = float(np.mean((pred - truth) ** 2))
-    if truth.ndim == 2 and truth.shape[1] > 1:
-        acc = float(np.mean(pred.argmax(axis=1) == truth.argmax(axis=1)))
-    else:
-        acc = float(np.mean(np.sign(pred) == np.sign(truth)))
-    return mse, acc
-
-
-def tune(
-    problem: KRRProblem,
-    *,
-    sigmas: Sequence[float] = (0.5, 1.0, 2.0),
-    lams: Sequence[float] = (1e-6, 1e-4, 1e-2),
-    folds: int = 5,
-    search: str = "grid",
-    num_samples: int | None = None,
-    strategy: str = "shared",
-    rank: int = 100,
-    max_iters: int = 200,
-    tol: float = 1e-5,
-    seed: int = 0,
-    warm_start: bool = True,
-    mesh=None,
-) -> TuneResult:
-    """Grid/random search over (sigma, lam_unscaled) with k-fold CV.
-
-    Args:
-      problem: the data container; its ``x``/``y``/``kernel``/``backend`` are
-        used, its ``sigma``/``lam_unscaled`` are ignored (they are what is
-        being tuned).  ``y`` may be (n,) or (n, t) one-vs-all heads — all t
-        heads ride the same stacked solve.
-      sigmas / lams: candidate kernel bandwidths and *unscaled* regularizers
-        (the solved shift is ``n_train_fold * lam_unscaled``, the paper's
-        App. C.2.1 scaling — same rule :class:`KRRProblem` applies).
-      folds: k for k-fold CV (2 <= k <= n); folds are a seeded shuffle-split
-        shared by every candidate and both strategies.
-      search: "grid" (full cross product) or "random" (``num_samples``
-        candidates drawn from the grid without replacement).
-      strategy: "shared" — per sigma, ONE stacked blocked-CG over all
-        (lam, fold, head) columns (the tile-sharing path); "naive" — an
-        independent PCG solve per (sigma, lam, fold), the reference loop the
-        benchmark compares against.
-      rank: Nystrom sketch rank for the preconditioner (and warm start).
-      max_iters / tol: blocked-CG budget per stacked (or per-candidate) solve.
-      warm_start: start each column from the Woodbury apply of the shared
-        sketch instead of zero ("shared" strategy only; costs no kernel
-        sweeps).
-      mesh: optional ``jax.sharding.Mesh`` — candidates then run over a
-        :class:`~repro.distributed.sharded_operator.ShardedKernelOperator`
-        with x/iterates row-sharded (a 1-device mesh is valid everywhere).
-
-    Returns:
-      A :class:`TuneResult`; ``result.best`` is the serving-ready config and
-      ``result.sweeps`` the kernel-tile work consumed.
-    """
-    if search not in SEARCHES:
-        raise ValueError(f"unknown search {search!r}; accepted: {SEARCHES}")
-    if strategy not in STRATEGIES:
-        raise ValueError(f"unknown strategy {strategy!r}; accepted: {STRATEGIES}")
-    if not sigmas or not lams:
-        raise ValueError("sigmas and lams must be non-empty")
-    if any(s <= 0 for s in sigmas) or any(l <= 0 for l in lams):
-        raise ValueError("sigmas and lams must be positive")
-    n = problem.n
-    if not 2 <= folds <= n:
-        raise ValueError(f"folds must be in [2, n={n}]; got {folds}")
-    if strategy == "naive" and mesh is not None and mesh.devices.size > 1:
-        # the naive loop restricts to (k-1)/k * n rows per fold, which the
-        # sharded operator would gather fully replicated onto every device —
-        # anti-scalable by construction; the reference loop is single-device
-        raise ValueError(
-            "strategy='naive' is a single-device reference loop; it supports "
-            "at most a 1-device mesh (use strategy='shared' for mesh runs)"
-        )
-
-    rng = np.random.default_rng(seed)
-    cands = _candidates(sigmas, lams, search, num_samples, rng)
-    val_folds = _make_folds(n, folds, np.random.default_rng(seed + 1))
-    y2, _ = as_multirhs(problem.y)
-    y_np = np.asarray(y2)
-    t = y_np.shape[1]
-    counter = SweepCounter()
-
-    # group candidates by sigma, preserving first-seen sigma order
-    by_sigma: dict[float, list[float]] = {}
-    for s, l in cands:
-        by_sigma.setdefault(s, []).append(l)
-
-    records: list[dict[str, Any]] = []
-    iters_by_sigma: dict[float, int] = {}
-    best_w0: np.ndarray | None = None
-    best_mse_so_far = np.inf
-    squeeze_w0 = problem.y.ndim == 1
-    for s, lam_list in by_sigma.items():
-        if strategy == "shared":
-            op = _operator_for(problem, s, mesh)
-            preds, iters, w_cols = _tune_one_sigma_shared(
-                op, y_np, lam_list, val_folds, rank=min(rank, n),
-                max_iters=max_iters, tol=tol, seed=seed, warm_start=warm_start,
-                counter=counter,
-            )
-            iters_by_sigma[s] = iters
-            k = len(val_folds)
-            for li, lam_u in enumerate(lam_list):
-                fold_mse, fold_acc = [], []
-                for j, val in enumerate(val_folds):
-                    cols = slice((li * k + j) * t, (li * k + j) * t + t)
-                    mse, acc = _score_fold(preds[val, cols], y_np[val])
-                    fold_mse.append(mse)
-                    fold_acc.append(acc)
-                records.append(_record(s, lam_u, fold_mse, fold_acc, t))
-                if records[-1]["cv_mse"] < best_mse_so_far:
-                    # the winner's refit warm start: mask-supported mean of
-                    # its k fold solutions (computed lazily — slicing w_cols
-                    # is free, keeping every candidate's block would not be)
-                    best_mse_so_far = records[-1]["cv_mse"]
-                    best_w0 = _fold_avg_w0(
-                        w_cols, li * k * t, k, t, squeeze_w0
-                    )
-        else:
-            for lam_u in lam_list:
-                fold_mse, fold_acc = [], []
-                per_fold = _tune_one_candidate_naive(
-                    problem, s, lam_u, val_folds, rank=rank,
-                    max_iters=max_iters, tol=tol, seed=seed, counter=counter,
-                    mesh=mesh,
-                )
-                for pred, val in zip(per_fold, val_folds):
-                    mse, acc = _score_fold(pred, y_np[val])
-                    fold_mse.append(mse)
-                    fold_acc.append(acc)
-                records.append(_record(s, lam_u, fold_mse, fold_acc, t))
-
-    best_i = int(np.argmin([r["cv_mse"] for r in records]))
-    best_rec = records[best_i]
-    best = {
-        "kernel": problem.kernel,
-        "sigma": best_rec["sigma"],
-        "lam_unscaled": best_rec["lam_unscaled"],
-        "backend": problem.backend,
-        "folds": folds,
-        "cv_mse": best_rec["cv_mse"],
-    }
-    # what the per-candidate loop would have cost, in full-K sweeps: each of
-    # the |cands| * k fold solves pays its own sketch + iteration sweeps over
-    # ((k-1)/k * n)^2 tiles
-    frac = ((folds - 1) / folds) ** 2
-    est_iters = max(iters_by_sigma.values()) if iters_by_sigma else max_iters
-    naive_est = len(cands) * folds * frac * (est_iters + 1)
-    return TuneResult(
-        best=best,
-        best_score=best_rec["cv_mse"],
-        records=records,
-        folds=folds,
-        search=search,
-        strategy=strategy,
-        sweeps=counter.sweeps(n),
-        info={
-            "pairs": counter.pairs,
-            "n": n,
-            "t": t,
-            "candidates": len(cands),
-            "iters_by_sigma": {str(k_): v for k_, v in iters_by_sigma.items()},
-            "naive_sweep_estimate": naive_est,
-        },
-        best_w0=best_w0,
-    )
-
-
-def _record(
-    sigma: float, lam_u: float, fold_mse: list[float], fold_acc: list[float], t: int
-) -> dict[str, Any]:
-    rec: dict[str, Any] = {
-        "sigma": sigma,
-        "lam_unscaled": lam_u,
-        "cv_mse": float(np.mean(fold_mse)),
-        "fold_mse": fold_mse,
-    }
-    if t > 1:
-        rec["cv_acc"] = float(np.mean(fold_acc))
-    return rec
-
-
-# ---------------------------------------------------------------------------
-# multi-kernel search: himalaya-style random search over convex kernel
-# combinations, layered onto the SAME stacked engine — every (w, lam, fold,
-# head) candidate is one more column of the one blocked-CG per sigma
-# ---------------------------------------------------------------------------
-
-
-def _weight_candidates(
-    q: int,
-    n_weight_samples: int,
-    weights,
-    dirichlet_alpha: float,
-    rng: np.random.Generator,
-) -> np.ndarray:
-    """The (M, q) weight-candidate matrix: explicit rows, or Dirichlet draws
-    from the simplex (himalaya's ``solve_multiple_kernel_ridge_random_search``
-    sampling scheme)."""
-    if weights is not None:
-        w = np.atleast_2d(np.asarray(weights, np.float32))
-        if w.shape[1] != q:
-            raise ValueError(
-                f"weight candidates have {w.shape[1]} entries per row for "
-                f"{q} kernels"
-            )
-        if (w < 0).any() or (w.sum(axis=1) <= 0).any():
-            raise ValueError(
-                "weight candidates must be nonnegative with positive row sums"
-            )
-        return w
-    if n_weight_samples < 1:
-        raise ValueError("n_weight_samples must be >= 1")
-    if dirichlet_alpha <= 0:
-        raise ValueError("dirichlet_alpha must be positive")
-    return rng.dirichlet(
-        np.full(q, float(dirichlet_alpha)), size=int(n_weight_samples)
-    ).astype(np.float32)
-
-
-def _tune_one_sigma_multi_shared(
-    op: Any,
-    y2: np.ndarray,
-    weight_samples: np.ndarray,
-    lam_list: list[float],
-    val_folds: list[np.ndarray],
-    *,
-    rank: int,
-    max_iters: int,
-    tol: float,
-    seed: int,
-    warm_start: bool,
-    counter: SweepCounter,
-) -> tuple[np.ndarray, int, np.ndarray]:
-    """Solve ALL (weight, lam, fold, head) systems for one sigma in ONE
-    stacked blocked-CG: columns ``c = ((m * l + lam_i) * k + fold_j) * t + h``.
-
-    Column c's operator is ``M_j (sum_i W[m, i] K_i) M_j + lam_c I`` — the
-    per-column weight vector rides the fused multi-kernel matvec
-    (``op.matvec_cols``), so the kernel-tile work per iteration is ONE data
-    sweep no matter how many weight candidates are in flight.  The q
-    per-kernel Nystrom sketches come from one ``sketch_components`` sweep;
-    candidate m's preconditioner/warm-start factors are its weighted sketch
-    combination (``K_w Omega = sum_i w_i K_i Omega``) — zero extra sweeps.
-
-    Returns ``(preds, iters, w_cols)`` exactly like the single-kernel engine.
-    """
-    n, t = y2.shape
-    k = len(val_folds)
-    l = len(lam_list)
-    m_w = weight_samples.shape[0]
-    c_m = l * k * t  # columns per weight sample
-
-    fold_mask = np.ones((n, k), np.float32)
-    for j, val in enumerate(val_folds):
-        fold_mask[val, j] = 0.0
-    n_train = [n - len(val) for val in val_folds]
-
-    # columns: weight outer, then lam, fold, head (head innermost)
-    fh_mask = np.repeat(fold_mask, t, axis=1)  # (n, k*t)
-    fh_rhs = (fold_mask[:, :, None] * y2[:, None, :]).reshape(n, k * t)
-    masks_cols = np.tile(fh_mask, (1, m_w * l))
-    rhs = np.tile(fh_rhs, (1, m_w * l))
-    lam_block = np.repeat(
-        np.asarray(
-            [scaled_lam(n_train[j], lam_u) for lam_u in lam_list for j in range(k)],
-            np.float32,
-        ),
-        t,
-    )  # (l*k*t,)
-    lam_cols = np.tile(lam_block, m_w)  # (C,)
-    col_weights = np.repeat(weight_samples.T, c_m, axis=1)  # (q, C)
-
-    masks_d = _place(op, masks_cols)
-    rhs_d = _place(op, rhs)
-    lam_d = jnp.asarray(lam_cols)
-    wc_d = jnp.asarray(col_weights)
-
-    # ONE data sweep: q per-kernel sketches of the shared test matrix
-    rng = np.random.default_rng(seed)
-    omega = _place(op, rng.standard_normal((n, rank)).astype(np.float32))
-    omega, _ = jnp.linalg.qr(omega)
-    y_stack = op.sketch_components(omega)  # (q, n, r)
-    counter.add_matvec(n, n)
-
-    # per weight sample: Nystrom factors of K_w from the combined sketch
-    us, lams_ny = [], []
-    for m in range(m_w):
-        w_m = jnp.asarray(weight_samples[m])
-        f_m = nystrom_from_sketch(
-            jnp.tensordot(w_m, y_stack, axes=1), omega,
-            float(weight_samples[m].sum()) * op.trace_est(),
-        )
-        us.append(f_m.u)
-        lams_ny.append(f_m.lam)
-    u_st = jnp.stack(us)  # (M, n, r)
-    lam_st = jnp.stack(lams_ny)  # (M, r)
-
-    lam3 = lam_d.reshape(m_w, c_m)  # (M, Cm) per-column shifts
-    rho = lam3 + lam_st[:, -1:]  # damped rho per column
-    coeff = (lam_st[:, -1:][:, :, None] + rho[:, None, :]) / (
-        lam_st[:, :, None] + rho[:, None, :]
-    )  # (M, r, Cm)
-
-    @jax.jit
-    def matvec(v: jax.Array) -> jax.Array:
-        # one fused multi-kernel pass over ALL columns; the per-column weight
-        # vector, mask and shift are elementwise
-        return masks_d * op.matvec_cols(masks_d * v, wc_d) + lam_d * v
-
-    @jax.jit
-    def pinv(r_blk: jax.Array) -> jax.Array:
-        r3 = r_blk.reshape(n, m_w, c_m)
-        utv = jnp.einsum("mnr,nmc->mrc", u_st, r3)
-        uutv = jnp.einsum("mnr,mrc->nmc", u_st, utv)
-        out3 = jnp.einsum("mnr,mrc->nmc", u_st, coeff * utv) + (r3 - uutv)
-        return masks_d * out3.reshape(n, m_w * c_m)
-
-    x0 = None
-    if warm_start:
-
-        @jax.jit
-        def _warm(rhs_in: jax.Array) -> jax.Array:
-            # per-column Woodbury apply of candidate m's Nystrom inverse
-            rhs3 = rhs_in.reshape(n, m_w, c_m)
-            utg = jnp.einsum("mnr,nmc->mrc", u_st, rhs3)
-            core = utg / (lam_st[:, :, None] + lam3[:, None, :])
-            out3 = jnp.einsum("mnr,mrc->nmc", u_st, core) + (
-                rhs3 - jnp.einsum("mnr,mrc->nmc", u_st, utg)
-            ) / lam3[None, :, :]
-            return masks_d * out3.reshape(n, m_w * c_m)
-
-        x0 = _warm(rhs_d)
-
-    res = blocked_cg(matvec, rhs_d, pinv, x0=x0, max_iters=max_iters, tol=tol)
-    counter.add_matvec(n, n, res.iters + (1 if x0 is not None else 0))
-
-    preds = op.matvec_cols(res.x, wc_d)  # ONE more sweep scores every candidate
-    counter.add_matvec(n, n)
-    return np.asarray(preds), res.iters, np.asarray(res.x)
-
-
-def _mk_record(
-    sigma: float,
-    w: np.ndarray,
-    lam_u: float,
-    fold_mse: list[float],
-    fold_acc: list[float],
-    t: int,
-) -> dict[str, Any]:
-    rec = _record(sigma, lam_u, fold_mse, fold_acc, t)
-    rec["weights"] = [float(x) for x in w]
-    return rec
-
-
-def tune_multikernel(
-    problem: KRRProblem,
-    *,
-    kernels: Sequence[str] | None = None,
-    sigmas: Sequence[float] = (0.5, 1.0, 2.0),
-    lams: Sequence[float] = (1e-6, 1e-4, 1e-2),
-    folds: int = 5,
-    n_weight_samples: int = 8,
-    weights=None,
-    dirichlet_alpha: float = 1.0,
-    strategy: str = "shared",
-    rank: int = 100,
-    max_iters: int = 200,
-    tol: float = 1e-5,
-    seed: int = 0,
-    warm_start: bool = True,
-    mesh=None,
-) -> TuneResult:
-    """Random search over convex kernel combinations with k-fold CV.
-
-    himalaya's ``solve_multiple_kernel_ridge_random_search`` draws weight
-    vectors from the simplex and scores the banded per-candidate systems;
-    here every (weight, lam, fold, head) candidate becomes one more COLUMN
-    of the same stacked blocked-CG the (sigma, lam) tuner runs — per sigma,
-    the whole c-candidate search costs ~1 solve's kernel-tile work (the
-    acceptance claim ``benchmarks/bench_multikernel.py`` measures).
-
-    Args:
-      problem: data container; ``kernels`` defaults to ``problem.kernel``
-        when that is already a tuple.  ``y`` may be (n,) or (n, t).
-      kernels: the q base-kernel names of the combination.
-      sigmas: candidate bandwidths, shared by all q kernels per sigma group.
-      lams: candidate *unscaled* regularizers (paper App. C.2.1 scaling).
-      folds: k for k-fold CV (same seeded shuffle-split as :func:`tune`).
-      n_weight_samples: number of Dirichlet(``dirichlet_alpha``) weight
-        draws from the simplex.
-      weights: explicit (M, q) weight-candidate rows (overrides sampling;
-        e.g. one-hot rows reproduce single-kernel tuning exactly).
-      strategy: "shared" (the stacked engine) or "naive" (independent
-        Nystrom-PCG per (sigma, weight, lam, fold) — the reference loop).
-      rank / max_iters / tol / warm_start / seed / mesh: as in :func:`tune`.
-
-    Returns:
-      A :class:`TuneResult`; ``best`` carries ``kernel`` (the q names),
-      ``weights``, ``sigma``, ``lam_unscaled`` — serving-ready via
-      ``make_krr_predict_fn_from_config`` — and ``best_w0`` the winner's
-      fold-averaged warm start.  Records carry per-candidate ``weights``.
-    """
-    from repro.core.multikernel import canonical_kernels
-
-    if kernels is None:
-        if not isinstance(problem.kernel, tuple):
-            raise ValueError(
-                "tune_multikernel needs kernels=(...) or a problem whose "
-                f"kernel is a tuple; got kernel={problem.kernel!r}"
-            )
-        kernels = problem.kernel
-    kernels, _, _ = canonical_kernels(kernels, 1.0, None)
-    q = len(kernels)
-    if strategy not in STRATEGIES:
-        raise ValueError(f"unknown strategy {strategy!r}; accepted: {STRATEGIES}")
-    if not sigmas or not lams:
-        raise ValueError("sigmas and lams must be non-empty")
-    if any(s <= 0 for s in sigmas) or any(lv <= 0 for lv in lams):
-        raise ValueError("sigmas and lams must be positive")
-    n = problem.n
-    if not 2 <= folds <= n:
-        raise ValueError(f"folds must be in [2, n={n}]; got {folds}")
-    if strategy == "naive" and mesh is not None and mesh.devices.size > 1:
-        raise ValueError(
-            "strategy='naive' is a single-device reference loop; it supports "
-            "at most a 1-device mesh (use strategy='shared' for mesh runs)"
-        )
-
-    rng = np.random.default_rng(seed)
-    w_cands = _weight_candidates(q, n_weight_samples, weights, dirichlet_alpha, rng)
-    m_w = w_cands.shape[0]
-    sig_list = [float(s) for s in dict.fromkeys(sigmas)]
-    lam_list = [float(lv) for lv in lams]
-    l = len(lam_list)
-    val_folds = _make_folds(n, folds, np.random.default_rng(seed + 1))
-    y2, _ = as_multirhs(problem.y)
-    y_np = np.asarray(y2)
-    t = y_np.shape[1]
-    counter = SweepCounter()
-    # the problem restated as the multi-kernel combination being searched
-    mk_problem = dataclasses.replace(
-        problem, kernel=kernels, sigma=1.0, weights=None
-    )
-
-    records: list[dict[str, Any]] = []
-    iters_by_sigma: dict[float, int] = {}
-    best_w0: np.ndarray | None = None
-    best_mse_so_far = np.inf
-    squeeze_w0 = problem.y.ndim == 1
-    k = len(val_folds)
-    for s in sig_list:
-        if strategy == "shared":
-            op = _operator_for(mk_problem, s, mesh)
-            preds, iters, w_cols = _tune_one_sigma_multi_shared(
-                op, y_np, w_cands, lam_list, val_folds, rank=min(rank, n),
-                max_iters=max_iters, tol=tol, seed=seed, warm_start=warm_start,
-                counter=counter,
-            )
-            iters_by_sigma[s] = iters
-            for m in range(m_w):
-                for li, lam_u in enumerate(lam_list):
-                    col0 = (m * l + li) * k * t
-                    fold_mse, fold_acc = [], []
-                    for j, val in enumerate(val_folds):
-                        cols = slice(col0 + j * t, col0 + (j + 1) * t)
-                        mse, acc = _score_fold(preds[val, cols], y_np[val])
-                        fold_mse.append(mse)
-                        fold_acc.append(acc)
-                    records.append(
-                        _mk_record(s, w_cands[m], lam_u, fold_mse, fold_acc, t)
-                    )
-                    if records[-1]["cv_mse"] < best_mse_so_far:
-                        best_mse_so_far = records[-1]["cv_mse"]
-                        best_w0 = _fold_avg_w0(w_cols, col0, k, t, squeeze_w0)
-        else:
-            for m in range(m_w):
-                for lam_u in lam_list:
-                    fold_mse, fold_acc = [], []
-                    per_fold = _tune_one_candidate_naive(
-                        mk_problem, s, lam_u, val_folds, rank=rank,
-                        max_iters=max_iters, tol=tol, seed=seed,
-                        counter=counter, mesh=mesh, weights=w_cands[m],
-                    )
-                    for pred, val in zip(per_fold, val_folds):
-                        mse, acc = _score_fold(pred, y_np[val])
-                        fold_mse.append(mse)
-                        fold_acc.append(acc)
-                    records.append(
-                        _mk_record(s, w_cands[m], lam_u, fold_mse, fold_acc, t)
-                    )
-
-    best_i = int(np.argmin([r["cv_mse"] for r in records]))
-    best_rec = records[best_i]
-    best = {
-        "kernel": list(kernels),
-        "sigma": best_rec["sigma"],
-        "weights": best_rec["weights"],
-        "lam_unscaled": best_rec["lam_unscaled"],
-        "backend": problem.backend,
-        "folds": folds,
-        "cv_mse": best_rec["cv_mse"],
-    }
-    n_cands = len(sig_list) * m_w * l
-    frac = ((folds - 1) / folds) ** 2
-    est_iters = max(iters_by_sigma.values()) if iters_by_sigma else max_iters
-    naive_est = n_cands * folds * frac * (est_iters + 1)
-    return TuneResult(
-        best=best,
-        best_score=best_rec["cv_mse"],
-        records=records,
-        folds=folds,
-        search="random",
-        strategy=strategy,
-        sweeps=counter.sweeps(n),
-        info={
-            "pairs": counter.pairs,
-            "n": n,
-            "t": t,
-            "q": q,
-            "kernels": list(kernels),
-            "weight_samples": m_w,
-            "candidates": n_cands,
-            "iters_by_sigma": {str(k_): v for k_, v in iters_by_sigma.items()},
-            "naive_sweep_estimate": naive_est,
-        },
-        best_w0=best_w0,
-    )
+from repro.core.tune import (  # noqa: F401
+    SEARCHES,
+    STRATEGIES,
+    SweepCounter,
+    TuneResult,
+    apply_best,
+    tune,
+    tune_multikernel,
+)
+
+__all__ = [
+    "SEARCHES",
+    "STRATEGIES",
+    "SweepCounter",
+    "TuneResult",
+    "apply_best",
+    "tune",
+    "tune_multikernel",
+]

@@ -35,6 +35,15 @@ whole ASkotch iteration into one shard_map body built from them (block
 gather, distributed Nystrom, Woodbury applies, powering) without touching
 ``kernels.ops`` or hand-rolling collectives.
 
+The tuning engine (``core/tune/engine.py``) runs its stacked per-sigma
+solves against this operator through the same primitives a local
+``KernelOperator`` exposes — ``matvec``/``matvec_cols`` for the fused
+column block, ``sketch``/``sketch_components`` for the per-sigma Nystrom
+factors — so every search policy (grid / random / successive halving,
+with or without sigma-continuation) runs unchanged over a mesh: policies
+only ever see host-side score arrays, and the engine's mid-solve rung
+scoring is one more distributed ``matvec``.
+
 A mesh of total size 1 degrades gracefully: every collective is a no-op and
 all code paths run in a plain single-device pytest process.
 """

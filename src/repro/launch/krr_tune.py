@@ -11,15 +11,25 @@
     PYTHONPATH=src python -m repro.launch.krr_tune \
         --kernels rbf,laplacian,matern52 --n-weight-samples 8
 
-The sweep is the tile-sharing path of ``core.tuning`` (``--strategy naive``
-runs the per-candidate reference loop for comparison); ``--kernels`` (a
-comma list) grows the weight axis — himalaya-style Dirichlet random search
-over convex kernel combinations on the same stacked engine.  The report
-includes the kernel-sweep count so the sharing is visible.  After the sweep
-the best config is refit on the full training set with ``--method``
-(warm-started from the winner's fold-averaged CV solution when the method
-supports ``w0``) and scored on held-out test data; ``--export PATH`` writes
-the serving-ready best-config JSON consumed by ``serving.krr_serve.
+    # successive halving (prune losers mid-solve) + sigma-continuation
+    PYTHONPATH=src python -m repro.launch.krr_tune --policy halving \
+        --sigma-continuation --lams 1e-8,1e-6,1e-4,1e-2
+
+The sweep is the tile-sharing path of ``repro.core.tune`` (``--strategy
+naive`` runs the per-candidate reference loop for comparison); ``--kernels``
+(a comma list) grows the weight axis — himalaya-style Dirichlet random
+search over convex kernel combinations on the same stacked engine.
+``--policy halving`` runs successive halving: losing (lam[, weight])
+candidates are frozen at rungs MID-SOLVE (strictly fewer kernel sweeps than
+the grid at equal best config when the winner separates early);
+``--sigma-continuation`` seeds each sigma group's solve and sketch from the
+previous group's result.  The report includes the kernel-sweep count so the
+sharing is visible.  After the sweep the best config is refit on the full
+training set with ``--method`` (warm-started from the winner's
+fold-averaged CV solution when the method supports ``w0``) and scored on
+held-out test data; ``--export PATH`` writes the serving-ready best-config
+JSON — including the per-candidate ``trace`` (rung scores + prune points)
+so the search is auditable — consumed by ``serving.krr_serve.
 make_krr_predict_fn_from_config``.  See docs/tuning.md for the walkthrough.
 """
 
@@ -34,7 +44,7 @@ import numpy as np
 from repro.core.krr import KRRProblem, evaluate
 from repro.core.solver_api import solve as solve_any
 from repro.core.solver_api import tune
-from repro.core.tuning import apply_best
+from repro.core.tune import apply_best
 from repro.data import synthetic
 
 
@@ -59,6 +69,15 @@ def main() -> None:
     ap.add_argument("--search", default="grid", choices=["grid", "random"])
     ap.add_argument("--samples", type=int, default=None,
                     help="random-search candidate count (default: full grid)")
+    ap.add_argument("--policy", default=None,
+                    choices=["grid", "random", "halving"],
+                    help="search policy (supersedes --search); 'halving' "
+                         "prunes losing candidates at rungs mid-solve")
+    ap.add_argument("--halving-eta", type=float, default=3.0,
+                    help="successive-halving reduction factor (> 1)")
+    ap.add_argument("--sigma-continuation", action="store_true",
+                    help="seed each sigma group's solve + sketch from the "
+                         "previous group instead of from zero")
     ap.add_argument("--strategy", default="shared", choices=["shared", "naive"])
     ap.add_argument("--rank", type=int, default=100,
                     help="Nystrom preconditioner rank")
@@ -110,15 +129,19 @@ def main() -> None:
         max_iters=args.iters,
         tol=args.tol,
         seed=args.seed,
+        sigma_continuation=args.sigma_continuation,
     )
+    if args.policy is not None:
+        tune_kw.update(policy=args.policy, halving_eta=args.halving_eta)
     if args.kernels is not None:
         if args.search != "grid" or args.samples is not None:
             ap.error(
                 "--search/--samples do not apply with --kernels; the weight "
-                "axis IS the random search (use --n-weight-samples)"
+                "axis IS the random search (use --n-weight-samples, or "
+                "--policy halving to prune it)"
             )
         # the weight axis: every (w, lam, fold, head) candidate rides the
-        # same stacked solve (core.tuning.tune_multikernel)
+        # same stacked solve (repro.core.tune.tune_multikernel)
         tune_kw.update(
             kernels=tuple(args.kernels.split(",")),
             n_weight_samples=args.n_weight_samples,
@@ -131,11 +154,13 @@ def main() -> None:
         "best": result.best,
         "strategy": result.strategy,
         "search": result.search,
+        "policy": result.info["policy"],
         "candidates": result.info["candidates"],
         "folds": result.folds,
         "kernel_sweeps": round(result.sweeps, 2),
         "naive_sweep_estimate": round(result.info["naive_sweep_estimate"], 2),
         "records": result.records,
+        "trace": result.trace,
     }
     if args.kernels is not None:
         report["weight_samples"] = result.info["weight_samples"]
@@ -168,8 +193,11 @@ def main() -> None:
     report["seconds"] = round(time.perf_counter() - t0, 2)
 
     if args.export:
+        # the serving-ready best config PLUS the audit trail: serving
+        # ignores unknown keys, so the same file feeds
+        # make_krr_predict_fn_from_config and post-hoc search forensics
         with open(args.export, "w") as fh:
-            json.dump(result.best, fh, indent=2)
+            json.dump({**result.best, "trace": result.trace}, fh, indent=2)
         report["exported"] = args.export
     print(json.dumps(report))
 

@@ -1,0 +1,181 @@
+"""blocked_cg external-freeze contract: externally frozen columns stop
+moving, surviving columns' trajectories are bit-identical to a solve without
+the pruned columns, the all-frozen early-exit works, and an all-zero RHS
+column is frozen at iteration 0 with rel_residual_per_head = 0 (no NaNs).
+
+The bit-identity tests use a DIAGONAL operator so every per-column float
+operation is elementwise — trajectories cannot be perturbed by matmul tiling
+across a different column count, isolating the blocked-CG mechanics (which
+is what the freeze hook must not disturb)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.blocked_cg import blocked_cg
+
+
+def _diag_problem(n=32, t=4, seed=0):
+    r = np.random.default_rng(seed)
+    d = jnp.asarray(np.linspace(1.0, 10.0, n).astype(np.float32))
+    rhs = jnp.asarray(r.standard_normal((n, t)).astype(np.float32))
+    return (lambda v: d[:, None] * v), rhs, d
+
+
+def test_externally_frozen_columns_stop_moving():
+    matvec, rhs, _ = _diag_problem()
+    snapshots = {}
+
+    def cb(it, x, rel_heads, frozen):
+        snapshots[it] = np.asarray(x).copy()
+        if it == 3:
+            m = np.zeros(rhs.shape[1], bool)
+            m[1] = True
+            return m
+        return None
+
+    res = blocked_cg(matvec, rhs, None, max_iters=30, tol=1e-12,
+                     freeze_at=range(1, 31), freeze_callback=cb)
+    assert res.frozen is not None and res.frozen[1] and not res.frozen[0]
+    # column 1 holds its iteration-3 value in the final solution
+    np.testing.assert_array_equal(np.asarray(res.x)[:, 1], snapshots[3][:, 1])
+    # while unfrozen columns kept converging past it
+    assert not np.array_equal(np.asarray(res.x)[:, 0], snapshots[3][:, 0])
+
+
+def test_survivor_trajectories_bit_identical_without_pruned_columns():
+    matvec, rhs, _ = _diag_problem(t=3)
+    # reference: solve ONLY columns 0 and 2
+    ref_traj = []
+
+    def ref_cb(it, x, rel_heads, frozen):
+        ref_traj.append(np.asarray(x).copy())
+        return None
+
+    ref = blocked_cg(matvec, rhs[:, [0, 2]], None, max_iters=12, tol=1e-30,
+                     freeze_at=range(1, 13), freeze_callback=ref_cb)
+    # full solve with column 1 externally frozen at the FIRST iteration
+    full_traj = []
+
+    def cb(it, x, rel_heads, frozen):
+        full_traj.append(np.asarray(x).copy())
+        if it == 1:
+            return np.asarray([False, True, False])
+        return None
+
+    full = blocked_cg(matvec, rhs, None, max_iters=12, tol=1e-30,
+                      freeze_at=range(1, 13), freeze_callback=cb)
+    assert full.iters == ref.iters
+    for got, want in zip(full_traj, ref_traj):
+        np.testing.assert_array_equal(got[:, [0, 2]], want)
+    np.testing.assert_array_equal(np.asarray(full.x)[:, [0, 2]],
+                                  np.asarray(ref.x))
+
+
+def test_all_columns_frozen_early_exit():
+    matvec, rhs, _ = _diag_problem()
+
+    def cb(it, x, rel_heads, frozen):
+        if it == 2:
+            return np.ones(rhs.shape[1], bool)
+        return None
+
+    res = blocked_cg(matvec, rhs, None, max_iters=50, tol=1e-30,
+                     freeze_at=(2,), freeze_callback=cb)
+    assert res.iters == 2  # exited at the freeze, not max_iters
+    assert res.frozen is not None and res.frozen.all()
+    assert not res.converged  # frozen != converged; the statement stays strict
+
+
+def test_freeze_only_at_listed_rungs():
+    matvec, rhs, _ = _diag_problem()
+    calls = []
+
+    def cb(it, x, rel_heads, frozen):
+        calls.append(it)
+        return None
+
+    blocked_cg(matvec, rhs, None, max_iters=10, tol=1e-30,
+               freeze_at=(3, 7), freeze_callback=cb)
+    assert calls == [3, 7]
+
+
+def test_zero_rhs_column_frozen_at_iteration_zero():
+    matvec, rhs, _ = _diag_problem(t=3)
+    rhs = rhs.at[:, 1].set(0.0)
+    res = blocked_cg(matvec, rhs, None, max_iters=40, tol=1e-10)
+    x = np.asarray(res.x)
+    assert np.isfinite(x).all()
+    np.testing.assert_array_equal(x[:, 1], 0.0)  # the exact solution
+    assert res.frozen is not None and res.frozen[1]
+    for h in res.history:
+        heads = h["rel_residual_per_head"]
+        assert heads[1] == 0.0 and np.isfinite(heads).all()
+    assert res.converged  # the live columns still converge normally
+
+
+def test_zero_rhs_column_with_warm_start_and_pinv():
+    # a nonzero x0 in a zero-RHS column must be zeroed, not iterated on
+    matvec, rhs, d = _diag_problem(t=2)
+    rhs = rhs.at[:, 0].set(0.0)
+    x0 = jnp.ones_like(rhs)
+    pinv = lambda r: r / d[:, None]
+    res = blocked_cg(matvec, rhs, pinv, x0=x0, max_iters=40, tol=1e-10)
+    x = np.asarray(res.x)
+    assert np.isfinite(x).all()
+    np.testing.assert_array_equal(x[:, 0], 0.0)
+    assert res.converged
+
+
+def test_all_zero_rhs_returns_immediately():
+    matvec, rhs, _ = _diag_problem()
+    res = blocked_cg(matvec, jnp.zeros_like(rhs), None, max_iters=40, tol=1e-10)
+    assert res.iters == 0 and res.converged
+    np.testing.assert_array_equal(np.asarray(res.x), 0.0)
+    assert res.frozen is not None and res.frozen.all()
+
+
+def test_no_freeze_args_matches_legacy_behavior():
+    # the default path (no freeze_at/callback, no zero columns) must be the
+    # plain convergence-freezing loop: converged result, frozen is None
+    matvec, rhs, _ = _diag_problem()
+    res = blocked_cg(matvec, rhs, None, max_iters=100, tol=1e-10)
+    assert res.converged and res.frozen is None
+    d = np.linspace(1.0, 10.0, rhs.shape[0]).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(res.x), np.asarray(rhs) / d[:, None], rtol=1e-5, atol=1e-6
+    )
+
+
+def test_kernel_operator_freeze_smoke():
+    # the same hook through a REAL kernel matvec (allclose, not bitwise —
+    # matmul tiling may differ): frozen column holds, survivors converge
+    from repro.core.operator import KernelOperator
+
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.standard_normal((48, 3)).astype(np.float32))
+    op = KernelOperator(x=x, kernel="rbf", sigma=1.0, backend="xla")
+    rhs = jnp.asarray(r.standard_normal((48, 3)).astype(np.float32))
+    lam = 0.1
+
+    def matvec(v):
+        return op.matvec(v) + lam * v
+
+    frozen_snap = {}
+
+    def cb(it, xk, rel, frozen):
+        if it == 2:
+            frozen_snap["x"] = np.asarray(xk).copy()
+            return np.asarray([False, False, True])
+        return None
+
+    res = blocked_cg(matvec, rhs, None, max_iters=200, tol=1e-8,
+                     freeze_at=(2,), freeze_callback=cb)
+    np.testing.assert_array_equal(np.asarray(res.x)[:, 2], frozen_snap["x"][:, 2])
+    ref = blocked_cg(matvec, rhs[:, :2], None, max_iters=200, tol=1e-8)
+    np.testing.assert_allclose(np.asarray(res.x)[:, :2], np.asarray(ref.x),
+                               rtol=1e-5, atol=1e-6)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

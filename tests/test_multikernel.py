@@ -17,7 +17,7 @@ from repro.core.kernels import kernel_fn
 from repro.core.krr import KRRProblem
 from repro.core.multikernel import WeightedSumKernelOperator, make_operator
 from repro.core.operator import KernelOperator
-from repro.core.tuning import apply_best, tune, tune_multikernel
+from repro.core.tune import apply_best, tune, tune_multikernel
 from repro.serving.krr_serve import make_krr_predict_fn_from_config
 
 KERNELS = ("rbf", "laplacian", "matern52")
@@ -342,7 +342,8 @@ def test_mk_cli_smoke(tmp_path, capsys, monkeypatch):
     assert report["refit_warm_start"] is True
     assert "test_rmse" in report["refit"]
     saved = json.loads(export.read_text())
-    assert saved == report["best"]
+    # the export is the serving-ready config PLUS the audit trail
+    assert saved == {**report["best"], "trace": report["trace"]}
 
 
 def test_mk_example_smoke(monkeypatch, capsys):

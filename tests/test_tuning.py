@@ -12,7 +12,7 @@ import pytest
 
 from repro.core.krr import KRRProblem
 from repro.core.solver_api import TUNE_OPTIONS, tune
-from repro.core.tuning import apply_best
+from repro.core.tune import apply_best
 from repro.serving.krr_serve import make_krr_predict_fn_from_config
 
 SIGMAS = (0.5, 2.0)
@@ -219,8 +219,12 @@ def test_tune_cli_smoke(tmp_path, capsys, monkeypatch):
     assert report["best"]["sigma"] in (0.7, 1.4)
     assert report["candidates"] == 4
     assert "test_rmse" in report["refit"]
+    # the export is the serving-ready config PLUS the audit trail
     saved = json.loads(export.read_text())
-    assert saved == report["best"]
+    assert saved == {**report["best"], "trace": report["trace"]}
+    assert len(saved["trace"]) == 4 and all(
+        t["pruned_at_rung"] is None for t in saved["trace"]
+    )
 
 
 def test_tune_example_smoke(monkeypatch, capsys):
@@ -231,3 +235,199 @@ def test_tune_example_smoke(monkeypatch, capsys):
     runpy.run_path("examples/krr_tune.py", run_name="__main__")
     out = capsys.readouterr().out
     assert "best" in out and "serve" in out
+
+# ---------------------------------------------------------------------------
+# PR 5: engine/policy split — policies, successive halving, sigma-continuation
+# ---------------------------------------------------------------------------
+
+
+def _halving_problem(n=256, d=4, seed=0):
+    # noisy targets put the CV-optimal lam mid-grid, so the tiny lams are
+    # slow LOSERS — the regime successive halving is built for
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal((n, d)).astype(np.float32))
+    y = (jnp.sin(2.0 * x[:, 0]) + 0.1 * x[:, 1]
+         + 0.1 * jnp.asarray(r.standard_normal(n).astype(np.float32)))
+    return KRRProblem(x=x, y=y, backend="xla")
+
+
+HALVING_KW = dict(sigmas=(0.5, 1.0, 2.0), lams=(1e-8, 1e-6, 1e-4, 1e-2),
+                  folds=4, rank=32, max_iters=400, tol=1e-6, seed=0)
+
+
+def test_policy_grid_reproduces_search_grid_exactly():
+    prob = _regression_problem()
+    r_legacy = tune(prob, search="grid", **TUNE_KW)
+    r_policy = tune(prob, policy="grid", **TUNE_KW)
+    assert r_legacy.best == r_policy.best
+    assert r_legacy.records == r_policy.records
+    assert r_legacy.sweeps == r_policy.sweeps
+    np.testing.assert_array_equal(r_legacy.best_w0, r_policy.best_w0)
+
+
+def test_policy_random_reproduces_search_random_exactly():
+    prob = _regression_problem(n=128)
+    kw = dict(sigmas=(0.5, 1.0, 2.0), lams=(1e-3, 1e-2, 1e-1), folds=2,
+              rank=16, max_iters=100, tol=1e-4, seed=7)
+    r_legacy = tune(prob, search="random", num_samples=4, **kw)
+    r_policy = tune(prob, policy="random", num_samples=4, **kw)
+    assert r_legacy.records == r_policy.records
+    assert r_legacy.best == r_policy.best
+
+
+def test_halving_beats_grid_at_equal_best_config():
+    # the acceptance claim, SweepCounter-asserted: same best config as the
+    # exhaustive grid, strictly fewer kernel sweeps
+    prob = _halving_problem()
+    rg = tune(prob, policy="grid", **HALVING_KW)
+    rh = tune(prob, policy="halving", **HALVING_KW)
+    assert rh.best["sigma"] == rg.best["sigma"]
+    assert rh.best["lam_unscaled"] == rg.best["lam_unscaled"]
+    assert rh.sweeps < rg.sweeps
+    # pruning actually happened mid-solve, and the stacked solves ended
+    # earlier than the grid's slowest-loser-bound iteration counts
+    pruned = [t for t in rh.trace if t["pruned_at_rung"] is not None]
+    assert pruned, "halving never pruned on the designed testbed"
+    it_h = sum(int(v) for v in rh.info["iters_by_sigma"].values())
+    it_g = sum(int(v) for v in rg.info["iters_by_sigma"].values())
+    assert it_h < it_g
+    # pruned candidates are marked in the records too
+    assert any("pruned_at_rung" in r for r in rh.records)
+
+
+def test_halving_never_prunes_the_running_best():
+    prob = _halving_problem()
+    rh = tune(prob, policy="halving", **HALVING_KW)
+    # the returned best candidate must have survived to the end
+    best_trace = [
+        t for t in rh.trace
+        if t["sigma"] == rh.best["sigma"]
+        and t["lam_unscaled"] == rh.best["lam_unscaled"]
+    ]
+    assert len(best_trace) == 1 and best_trace[0]["pruned_at_rung"] is None
+    # and best selection never returns a pruned candidate's stale score
+    best_rec = [r for r in rh.records if r["cv_mse"] == rh.best["cv_mse"]][0]
+    assert "pruned_at_rung" not in best_rec
+
+
+def test_halving_trace_is_auditable():
+    prob = _halving_problem()
+    rh = tune(prob, policy="halving", **HALVING_KW)
+    assert len(rh.trace) == len(rh.records) == rh.info["candidates"]
+    for t, r in zip(rh.trace, rh.records):
+        assert (t["sigma"], t["lam_unscaled"]) == (r["sigma"], r["lam_unscaled"])
+        assert len(t["scores"]) == len(t["iters"]) >= 1
+        assert t["scores"][-1] == r["cv_mse"]  # the final score closes the trail
+        if t["pruned_at_rung"] is not None:
+            # a pruned candidate stops accruing scores after its prune rung
+            assert len(t["scores"]) == t["pruned_at_rung"] + 2
+    # grid traces are the degenerate single-entry trail
+    rg = tune(prob, policy="grid", **HALVING_KW)
+    assert all(t["pruned_at_rung"] is None and len(t["scores"]) == 1
+               for t in rg.trace)
+
+
+def test_halving_eta_validation_and_naive_rejection():
+    prob = _regression_problem(n=64)
+    with pytest.raises(ValueError, match="halving_eta"):
+        tune(prob, policy="halving", halving_eta=1.0)
+    with pytest.raises(ValueError, match="strategy='shared'"):
+        tune(prob, policy="halving", strategy="naive")
+    with pytest.raises(ValueError, match="policy"):
+        tune(prob, policy="bogus")
+    with pytest.raises(ValueError, match="num_samples"):
+        tune(prob, policy="halving", num_samples=3)
+    with pytest.raises(ValueError, match="conflicting"):
+        tune(prob, search="random", policy="halving")
+    # the conflict check also covers SearchPolicy INSTANCES
+    from repro.core.tune import GridSearch
+
+    with pytest.raises(ValueError, match="conflicting"):
+        tune(prob, search="random", num_samples=2, policy=GridSearch())
+    with pytest.raises(ValueError, match="sigma_continuation"):
+        tune(prob, strategy="naive", sigma_continuation=True)
+
+
+def test_sigma_continuation_reduces_total_iterations():
+    # acceptance: on a >= 3-sigma grid, seeding each sigma group from the
+    # previous one cuts total stacked-CG iterations vs cold starts
+    prob = _halving_problem()
+    kw = dict(sigmas=(0.8, 1.0, 1.3, 1.6), lams=(1e-4, 1e-3, 1e-2), folds=3,
+              rank=32, max_iters=400, tol=1e-6, seed=0)
+    r_cont = tune(prob, sigma_continuation=True, warm_start=False, **kw)
+    r_cold = tune(prob, sigma_continuation=False, warm_start=False, **kw)
+    tot = lambda r: sum(int(v) for v in r.info["iters_by_sigma"].values())
+    assert tot(r_cont) < tot(r_cold)
+    # and the search outcome is unchanged
+    assert r_cont.best["sigma"] == r_cold.best["sigma"]
+    assert r_cont.best["lam_unscaled"] == r_cold.best["lam_unscaled"]
+    assert r_cont.info["sigma_continuation"] is True
+
+
+def test_halving_runs_unchanged_over_1device_mesh():
+    from repro.distributed.meshes import make_solver_mesh
+
+    prob = _halving_problem(n=160)
+    kw = dict(HALVING_KW, max_iters=200)
+    r_local = tune(prob, policy="halving", sigma_continuation=True, **kw)
+    r_mesh = tune(prob, mesh=make_solver_mesh((1, 1)), policy="halving",
+                  sigma_continuation=True, **kw)
+    assert r_local.best["sigma"] == r_mesh.best["sigma"]
+    assert r_local.best["lam_unscaled"] == r_mesh.best["lam_unscaled"]
+    # identical prune decisions, and identical scores for the SURVIVORS —
+    # pruned candidates' final scores are partially-converged by design and
+    # numerically sensitive between the local and sharded matmul paths
+    prunes_l = [t["pruned_at_rung"] for t in r_local.trace]
+    prunes_m = [t["pruned_at_rung"] for t in r_mesh.trace]
+    assert prunes_l == prunes_m
+    for a, b, pr in zip(r_local.records, r_mesh.records, prunes_l):
+        if pr is None:
+            np.testing.assert_allclose(a["cv_mse"], b["cv_mse"], rtol=1e-3)
+
+
+def test_multikernel_halving_prunes_weight_candidates():
+    from repro.core.tune import tune_multikernel
+
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((144, 4)).astype(np.float32))
+    y = (jnp.sin(2.0 * x[:, 0]) + 0.2 * jnp.sign(x[:, 1])
+         + 0.3 * jnp.asarray(np.random.default_rng(1).standard_normal(144).astype(np.float32)))
+    prob = KRRProblem(x=x, y=y, backend="xla")
+    kw = dict(kernels=("rbf", "laplacian"), sigmas=(0.7, 1.5),
+              lams=(1e-7, 1e-3, 1e-1), folds=3, n_weight_samples=3,
+              rank=24, max_iters=400, tol=1e-6, seed=0)
+    rr = tune_multikernel(prob, **kw)
+    rh = tune_multikernel(prob, policy="halving", **kw)
+    assert rh.search == "halving"
+    assert rh.sweeps < rr.sweeps
+    assert rh.best["sigma"] == rr.best["sigma"]
+    assert rh.best["lam_unscaled"] == rr.best["lam_unscaled"]
+    assert rh.best["weights"] == rr.best["weights"]
+    assert any(t["pruned_at_rung"] is not None for t in rh.trace)
+    with pytest.raises(ValueError, match="weight axis"):
+        tune_multikernel(prob, policy="grid", **{k: v for k, v in kw.items()})
+
+
+def test_custom_policy_object_drives_the_engine():
+    from repro.core.tune import SuccessiveHalving
+
+    prob = _halving_problem(n=128)
+    pol = SuccessiveHalving(eta=2.0)
+    res = tune(prob, policy=pol, sigmas=(0.5, 1.0), lams=(1e-7, 1e-4, 1e-2),
+               folds=3, rank=16, max_iters=200, tol=1e-6, seed=0)
+    assert res.search == "halving"
+    assert res.info["policy"] == "halving"
+
+
+def test_tuning_shim_backcompat():
+    # core/tuning.py is now a thin shim over repro.core.tune — old imports
+    # keep working
+    import repro.core.tuning as shim
+
+    prob = _regression_problem(n=64)
+    res = shim.tune(prob, sigmas=(1.0,), lams=(1e-2,), folds=2, rank=8,
+                    max_iters=30, tol=1e-3)
+    assert isinstance(res, shim.TuneResult)
+    assert shim.apply_best(prob, res).sigma == 1.0
+    from repro.core.tune import TuneResult as pkg_result
+
+    assert shim.TuneResult is pkg_result
