@@ -1,7 +1,18 @@
 """Fig. 9 / §6.3: ASkotch converges linearly to (near) machine precision.
 
-Runs in f64 (paper uses double precision for this figure); reports the
-relative residual trajectory and the fitted per-pass geometric rate."""
+Runs in f64 (paper uses double precision for this figure): with
+``jax_enable_x64`` the dense kernel maps promote rather than truncate
+(``core.kernels._sq_dists`` keeps f64 operands in f64 — it only UPCASTS
+sub-f32 inputs), so the trajectory below ~1e-8 is a true double-precision
+measurement.  This is the opposite end of the precision policy from
+``precision="bf16"`` (docs/architecture.md, "Precision policy"): bf16 kernel
+tiles bottom out near ~1e-2..1e-1 relative residual depending on
+conditioning, so machine-precision targets are meaningless there —
+``solver_api.solve`` warns on any bf16 solve asked for tol below its
+``BF16_TOL_FLOOR``, and this benchmark intentionally has no bf16 variant.
+
+Reports the relative residual trajectory and the fitted per-pass geometric
+rate."""
 
 from __future__ import annotations
 

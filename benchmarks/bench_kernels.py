@@ -1,50 +1,97 @@
 """Hot-spot microbench: the fused kernel matvec (chunked-XLA execution path)
-and the Pallas kernel's arithmetic-intensity analysis for the TPU target.
+and the Pallas kernel's arithmetic-intensity analysis for the TPU target —
+both swept over the precision policy (f32 vs bf16 tiles, f32 accumulation).
 
 Wall-clock is CPU (execution backend); the Pallas-tile roofline numbers are
-derived analytically from the BlockSpec tiling (docs/architecture.md) since the TPU
-is the target, not the runtime."""
+derived analytically from the BlockSpec tiling (docs/architecture.md) since
+the TPU is the target, not the runtime.  The tile analysis is parameterized
+by the tile dtype: bf16 halves the A/B/V bytes per tile (the f32 accumulator
+row stays 4 bytes) AND doubles the MXU rate, so its roofline ridge sits at
+the full ``PEAK_FLOPS_BF16``; both dtypes report attainable throughput as a
+fraction of that bf16 peak so the two rows are directly comparable.
+
+``BENCH_KERNELS_SMOKE=1`` shrinks the wall-clock sweep for CI smoke runs
+(same shape of output, small-n inputs)."""
 
 from __future__ import annotations
+
+import os
 
 import numpy as np
 
 from benchmarks.common import emit, note, timeit
 
 
+def tile_roofline(d: int, bm: int = 256, bn: int = 256):
+    """Analytic per-tile roofline rows for the Pallas matvec, one per dtype.
+
+    Returns a list of (precision, flops_per_byte, bound, frac_peak_bf16)
+    tuples.  Per tile: the distance matmul (2*d MACs per element), the kernel
+    map + matvec epilogue (~8 flops per element), bm*d + bn*d + bn input
+    elements at the tile dtype's width and a bm-element f32 accumulator row.
+    """
+    from repro.roofline import hw
+
+    tile_flops = bm * bn * (2 * d + 8)  # dist matmul + kernel map + mv
+    rows = []
+    for precision, nbytes, peak in (
+        ("f32", 4, hw.PEAK_FLOPS_F32),
+        ("bf16", 2, hw.PEAK_FLOPS_BF16),
+    ):
+        tile_bytes = (bm * d + bn * d + bn) * nbytes + bm * 4
+        intensity = tile_flops / tile_bytes
+        ridge = peak / hw.HBM_BW
+        bound = "compute" if intensity > ridge else "memory"
+        attainable = min(peak, intensity * hw.HBM_BW)
+        rows.append((precision, intensity, bound, attainable / hw.PEAK_FLOPS_BF16))
+    return rows
+
+
 def main() -> None:
     import jax
 
     from repro.kernels import ops
-    from repro.roofline import hw
+
+    smoke = os.environ.get("BENCH_KERNELS_SMOKE") == "1"
+    sizes = ((20_000, 500),) if smoke else ((100_000, 1000), (400_000, 4000))
+    iters = 2 if smoke else 3
 
     r = np.random.default_rng(0)
     d = 9
-    for n, b in ((100_000, 1000), (400_000, 4000)):
+    for n, b in sizes:
         a = r.standard_normal((b, d)).astype(np.float32)
         x = r.standard_normal((n, d)).astype(np.float32)
         v = r.standard_normal((n,)).astype(np.float32)
 
-        def run(a=a, x=x, v=v):
-            jax.block_until_ready(
-                ops.kernel_matvec(a, x, v, kernel="rbf", sigma=1.0, backend="xla")
-            )
+        for precision in ("f32", "bf16"):
 
-        us = timeit(run, iters=3)
-        flops = b * n * (3 * d + 2)
-        emit(f"kernel_matvec_n{n}_b{b}", us, f"gflops_cpu={flops/us/1e3:.2f}")
+            def run(a=a, x=x, v=v, precision=precision):
+                jax.block_until_ready(
+                    ops.kernel_matvec(
+                        a, x, v, kernel="rbf", sigma=1.0, backend="xla",
+                        precision=precision,
+                    )
+                )
 
-    # Pallas tile analysis (bm=bn=256, f32): MXU work vs VMEM traffic
-    bm = bn = 256
+            us = timeit(run, iters=iters)
+            flops = b * n * (3 * d + 2)
+            emit(f"kernel_matvec_n{n}_b{b}_{precision}", us,
+                 f"gflops_cpu={flops/us/1e3:.2f}")
+
+    # Pallas tile analysis (bm=bn=256): MXU work vs VMEM traffic, per dtype.
+    # bf16 tiles halve the bytes AND double the MXU rate — the two rows per d
+    # show how much of the bf16 hardware peak each policy can reach.
     for dd in (9, 64, 256):
-        tile_flops = bm * bn * (2 * dd + 8)  # dist matmul + kernel map + mv
-        tile_bytes = (bm * dd + bn * dd + bn + bm) * 4
-        intensity = tile_flops / tile_bytes
-        ridge = hw.PEAK_FLOPS_BF16 / hw.HBM_BW  # ~240 flops/byte
-        bound = "compute" if intensity > ridge else "memory"
-        note(f"pallas tile d={dd}: {intensity:.0f} flop/B (ridge {ridge:.0f}) -> {bound}-bound")
-        emit(f"pallas_tile_intensity_d{dd}", 0.0,
-             f"flops_per_byte={intensity:.1f};bound={bound}")
+        for precision, intensity, bound, frac in tile_roofline(dd):
+            note(
+                f"pallas tile d={dd} {precision}: {intensity:.0f} flop/B "
+                f"-> {bound}-bound, {frac:.1%} of bf16 peak"
+            )
+            emit(
+                f"pallas_tile_intensity_d{dd}_{precision}", 0.0,
+                f"flops_per_byte={intensity:.1f};bound={bound};"
+                f"frac_peak_bf16={frac:.3f}",
+            )
 
 
 if __name__ == "__main__":

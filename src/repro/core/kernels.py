@@ -24,10 +24,14 @@ def _sq_dists(x: jax.Array, y: jax.Array) -> jax.Array:
     """Pairwise squared Euclidean distances via the matmul expansion.
 
     ||x - y||^2 = ||x||^2 + ||y||^2 - 2 <x, y>.  This is the MXU-friendly
-    form used by the Pallas kernel as well; f32 accumulation throughout.
+    form used by the Pallas kernel as well.  Inputs are promoted to at least
+    f32 (so bf16 chunks accumulate in f32, matching the fused-op contract)
+    but f64 operands stay f64 — the machine-precision convergence benchmark
+    (benchmarks/bench_fig9_convergence.py) depends on a true double path.
     """
-    x = x.astype(jnp.float32)
-    y = y.astype(jnp.float32)
+    dt = jnp.promote_types(x.dtype, jnp.float32)
+    x = x.astype(dt)
+    y = y.astype(dt)
     xx = jnp.sum(x * x, axis=-1)[:, None]
     yy = jnp.sum(y * y, axis=-1)[None, :]
     xy = x @ y.T
@@ -36,9 +40,11 @@ def _sq_dists(x: jax.Array, y: jax.Array) -> jax.Array:
 
 def _l1_dists(x: jax.Array, y: jax.Array) -> jax.Array:
     """Pairwise L1 distances.  O(m*n*d) memory if broadcast naively — callers
-    with large operands must go through the chunked/streaming ops."""
-    x = x.astype(jnp.float32)
-    y = y.astype(jnp.float32)
+    with large operands must go through the chunked/streaming ops.  Same
+    promote-to-at-least-f32 contract as :func:`_sq_dists`."""
+    dt = jnp.promote_types(x.dtype, jnp.float32)
+    x = x.astype(dt)
+    y = y.astype(dt)
     return jnp.sum(jnp.abs(x[:, None, :] - y[None, :, :]), axis=-1)
 
 

@@ -54,6 +54,7 @@ class KRRProblem:
     lam_unscaled: float = 1e-6
     backend: str = "auto"
     weights: tuple[float, ...] | None = None  # multi-kernel combination weights
+    precision: str = "f32"  # kernel tile-compute policy: "f32" | "bf16"
 
     def __post_init__(self) -> None:
         if isinstance(self.kernel, list):
@@ -88,6 +89,7 @@ class KRRProblem:
         return make_operator(
             self.x, kernel=self.kernel, sigma=self.sigma,
             weights=self.weights, backend=self.backend,
+            precision=self.precision,
         )
 
     def matvec(self, v: jax.Array) -> jax.Array:

@@ -110,6 +110,7 @@ class WeightedSumKernelOperator:
     backend: str = "auto"
     chunk_a: int = 4096
     chunk_b: int = 8192
+    precision: str = "f32"  # tile-compute policy: "f32" | "bf16"
 
     def __post_init__(self) -> None:
         ks, sg, w = canonical_kernels(self.kernels, self.sigma, self.weights)
@@ -156,6 +157,7 @@ class WeightedSumKernelOperator:
             KernelOperator(
                 x=self.x, kernel=k, sigma=s, backend=self.backend,
                 chunk_a=self.chunk_a, chunk_b=self.chunk_b,
+                precision=self.precision,
             )
             for k, s in zip(self.kernels, self.sigmas)
         )
@@ -186,6 +188,7 @@ class WeightedSumKernelOperator:
             a, self.x, v, kernels=self.kernels, sigmas=self.sigmas,
             weights=jnp.asarray(self.weights, jnp.float32),
             backend=self.backend, chunk_a=self.chunk_a, chunk_b=self.chunk_b,
+            precision=self.precision,
         )
 
     def block(self, a: jax.Array, b: jax.Array | None = None) -> jax.Array:
@@ -194,6 +197,7 @@ class WeightedSumKernelOperator:
         return ops.kernel_block_multi(
             a, b, kernels=self.kernels, sigmas=self.sigmas,
             weights=self.weights, backend=self.backend,
+            precision=self.precision,
         )
 
     def block_idx(self, idx: jax.Array) -> jax.Array:
@@ -235,6 +239,7 @@ class WeightedSumKernelOperator:
             a, self.x, v, kernels=self.kernels, sigmas=self.sigmas,
             weights=w_cols, backend=self.backend,
             chunk_a=self.chunk_a, chunk_b=self.chunk_b,
+            precision=self.precision,
         )
 
     def sketch_components(self, omega: jax.Array) -> jax.Array:
@@ -250,6 +255,7 @@ class WeightedSumKernelOperator:
         return ops.kernel_matvec_components(
             a, self.x, v, kernels=self.kernels, sigmas=self.sigmas,
             backend=self.backend, chunk_a=self.chunk_a, chunk_b=self.chunk_b,
+            precision=self.precision,
         )
 
 
@@ -262,6 +268,7 @@ def make_operator(
     backend: str = "auto",
     chunk_a: int = 4096,
     chunk_b: int = 8192,
+    precision: str = "f32",
 ):
     """Build the right operator for a kernel spec — the ONE dispatch point.
 
@@ -275,6 +282,7 @@ def make_operator(
         return WeightedSumKernelOperator(
             x=x, kernels=tuple(kernel), sigma=sigma, weights=weights,
             backend=backend, chunk_a=chunk_a, chunk_b=chunk_b,
+            precision=precision,
         )
     if weights is not None:
         raise ValueError(
@@ -288,5 +296,5 @@ def make_operator(
         )
     return KernelOperator(
         x=x, kernel=kernel, sigma=float(sigma), backend=backend,
-        chunk_a=chunk_a, chunk_b=chunk_b,
+        chunk_a=chunk_a, chunk_b=chunk_b, precision=precision,
     )

@@ -43,6 +43,7 @@ class KernelOperator:
     backend: str = "auto"
     chunk_a: int = 4096
     chunk_b: int = 8192
+    precision: str = "f32"  # tile-compute policy: "f32" | "bf16"
 
     @property
     def n(self) -> int:
@@ -81,13 +82,15 @@ class KernelOperator:
         return ops.kernel_matvec(
             a, self.x, v, kernel=self.kernel, sigma=self.sigma,
             backend=self.backend, chunk_a=self.chunk_a, chunk_b=self.chunk_b,
+            precision=self.precision,
         )
 
     def block(self, a: jax.Array, b: jax.Array | None = None) -> jax.Array:
         """Materialize K(a, b) (b defaults to a).  Small/medium tiles only."""
         b = a if b is None else b
         return ops.kernel_block(
-            a, b, kernel=self.kernel, sigma=self.sigma, backend=self.backend
+            a, b, kernel=self.kernel, sigma=self.sigma, backend=self.backend,
+            precision=self.precision,
         )
 
     def block_idx(self, idx: jax.Array) -> jax.Array:

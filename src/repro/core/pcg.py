@@ -5,6 +5,10 @@ Preconditioners:
                    2023), sketch computed with the fused streaming matvec;
                    supports the paper's "damped"/"regularization" rho modes.
   * "rpcholesky" — rank-r randomly-pivoted-Cholesky factor (Diaz et al. 2023).
+  * "rff"        — rank-r random-Fourier-feature factors (``core/rff.py``);
+                   rbf-only, built from one streamed feature pass with NO
+                   kernel sweeps, applied through the same damped-rho
+                   Woodbury formula as Nystrom.
   * "identity"   — plain CG.
 
 The iteration is blocked CG over (n, t) right-hand sides (Diaz et al. 2023
@@ -49,6 +53,17 @@ def _nystrom_full(problem: KRRProblem, rank: int, key: jax.Array) -> NystromFact
     return nystrom_from_sketch(sketch, omega, op.trace_est())
 
 
+def _rff_full(problem: KRRProblem, rank: int, key: jax.Array) -> NystromFactors:
+    from repro.core.rff import rff_factors  # local: keep pcg import-light
+
+    if problem.kernel != "rbf":
+        raise ValueError(
+            'kind="rff" preconditioning is rbf-only (the Gaussian spectral '
+            f"measure); got kernel={problem.kernel!r} — use kind=\"nystrom\""
+        )
+    return rff_factors(key, problem.x, rank, float(problem.sigma))
+
+
 def make_preconditioner(
     problem: KRRProblem,
     kind: str = "nystrom",
@@ -64,6 +79,8 @@ def make_preconditioner(
         return lambda v: v
     if kind == "nystrom":
         f = _nystrom_full(problem, rank, jax.random.PRNGKey(seed))
+    elif kind == "rff":
+        f = _rff_full(problem, rank, jax.random.PRNGKey(seed))
     elif kind == "rpcholesky":
         fmat, _ = rp_cholesky(jax.random.PRNGKey(seed), problem.op, rank)
         u, s, _ = jnp.linalg.svd(fmat, full_matrices=False)

@@ -20,23 +20,32 @@ mesh is valid and runs the distributed code with no-op collectives.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any
 
 import jax
 
 from repro.core import askotch, direct, eigenpro, falkon, pcg
 from repro.core.krr import KRRProblem
+from repro.kernels.precision import check_precision
 
 METHODS = (
     "askotch",
     "skotch",
     "pcg-nystrom",
     "pcg-rpcholesky",
+    "pcg-rff",
     "cg",
     "falkon",
     "eigenpro",
     "direct",
 )
+
+#: tolerances below this are unreachable with bf16 kernel tiles (unit
+#: roundoff 2^-8 per operand; the f32 accumulation keeps residuals near
+#: ~1e-6-1e-7 relative, not machine-f32/f64) — solve() warns, it does not
+#: silently stall
+BF16_TOL_FLOOR = 1e-6
 
 _ASKOTCH_CFG_KEYS = (
     "block_size", "rank", "rho_mode", "sampling", "precond",
@@ -61,6 +70,7 @@ METHOD_OPTIONS: dict[str, tuple[str, ...]] = {
     "skotch": _ASKOTCH_CFG_KEYS + _ASKOTCH_SOLVE_KEYS,
     "pcg-nystrom": _PCG_KEYS,
     "pcg-rpcholesky": _PCG_KEYS,
+    "pcg-rff": _PCG_KEYS,
     "cg": _PCG_KEYS,
     "falkon": _FALKON_KEYS,
     "eigenpro": _EIGENPRO_KEYS,
@@ -92,7 +102,7 @@ DIST_METHOD_OPTIONS: dict[str, tuple[str, ...]] = {
 TUNE_OPTIONS: tuple[str, ...] = (
     "sigmas", "lams", "folds", "search", "num_samples", "policy",
     "halving_eta", "sigma_continuation", "strategy",
-    "rank", "max_iters", "tol", "seed", "warm_start",
+    "rank", "max_iters", "tol", "seed", "warm_start", "precision",
 )
 
 #: accepted keyword options of tune() on the multi-kernel (weight-axis)
@@ -101,7 +111,7 @@ TUNE_OPTIONS: tuple[str, ...] = (
 MULTIKERNEL_TUNE_OPTIONS: tuple[str, ...] = (
     "kernels", "sigmas", "lams", "folds", "n_weight_samples", "weights",
     "dirichlet_alpha", "policy", "halving_eta", "sigma_continuation",
-    "strategy", "rank", "max_iters", "tol", "seed", "warm_start",
+    "strategy", "rank", "max_iters", "tol", "seed", "warm_start", "precision",
 )
 
 
@@ -213,6 +223,12 @@ def tune(problem: KRRProblem, *, mesh=None, **kw):
             f"unknown option(s) {unknown} for {kind}; "
             f"accepted: {sorted(accepted)}"
         )
+    if "precision" in kw:
+        # universal precision override, mirroring solve(): the policy lives
+        # on the problem and rides into every candidate operator
+        problem = dataclasses.replace(
+            problem, precision=check_precision(kw.pop("precision"))
+        )
     # lazy: keeps solve()-only imports light (imports the tune PACKAGE —
     # ``repro.core.tune`` the attribute is this very function)
     from repro.core.tune import tune as _tune
@@ -238,12 +254,17 @@ def solve(problem: KRRProblem, method: str = "askotch", *, mesh=None, **kw) -> S
         valid and runs the distributed code with no-op collectives.
       **kw: method-specific options — exactly :data:`METHOD_OPTIONS[method]`
         (:data:`DIST_METHOD_OPTIONS[method]` with ``mesh=``); anything else
-        raises ValueError with the accepted list.  Two universal overrides
+        raises ValueError with the accepted list.  Three universal overrides
         are accepted for every method: ``kernel=`` (a name, or a TUPLE of
-        names for a weighted-sum multi-kernel solve) and ``weights=`` (the
-        combination weights) re-parameterize the problem before solving —
+        names for a weighted-sum multi-kernel solve), ``weights=`` (the
+        combination weights) and ``precision=`` ("f32" | "bf16" kernel-tile
+        policy) re-parameterize the problem before solving —
         ``solve(p, "pcg-nystrom", kernel=("rbf", "matern52"), weights=(0.7,
-        0.3))`` runs the convex kernel combination through the same solver.
+        0.3))`` runs the convex kernel combination through the same solver,
+        and ``solve(p, "askotch", precision="bf16")`` runs every kernel
+        sweep with bf16 tiles + f32 accumulation (solver internals stay f32;
+        a ``tol`` below ~1e-6 triggers a warning since bf16 tiles cannot
+        reach machine-precision residuals).
 
     Returns:
       A :class:`SolveOutput`: ``w`` ((n,), (n, t), or (m[, t]) for Falkon's
@@ -253,13 +274,25 @@ def solve(problem: KRRProblem, method: str = "askotch", *, mesh=None, **kw) -> S
     """
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; available: {METHODS}")
-    if "kernel" in kw or "weights" in kw:
-        # universal multi-kernel overrides: rebuild the problem, then solve
-        # through the unchanged per-method path (the operator layer absorbs
-        # the weighted combination)
+    if "kernel" in kw or "weights" in kw or "precision" in kw:
+        # universal overrides: rebuild the problem, then solve through the
+        # unchanged per-method path (the operator layer absorbs the weighted
+        # combination and the tile-precision policy)
         problem = dataclasses.replace(
             problem,
-            **{k: kw.pop(k) for k in ("kernel", "weights") if k in kw},
+            **{
+                k: kw.pop(k)
+                for k in ("kernel", "weights", "precision")
+                if k in kw
+            },
+        )
+    check_precision(problem.precision)
+    if problem.precision == "bf16" and kw.get("tol", 1.0) < BF16_TOL_FLOOR:
+        warnings.warn(
+            f"tol={kw['tol']:g} is below the bf16 kernel-tile resolution "
+            f"(~{BF16_TOL_FLOOR:g} relative residual); the solve will stall "
+            'short of it — use precision="f32" for machine-precision targets',
+            stacklevel=2,
         )
     if mesh is not None:
         return _solve_dist(problem, method, mesh, kw)
@@ -276,8 +309,11 @@ def solve(problem: KRRProblem, method: str = "askotch", *, mesh=None, **kw) -> S
                   "wall_time_s": res.wall_time_s, **_head_info(problem, res.history)},
             predict_fn=lambda xt: problem.predict(res.w, xt),
         )
-    if method in ("pcg-nystrom", "pcg-rpcholesky", "cg"):
-        precond = {"pcg-nystrom": "nystrom", "pcg-rpcholesky": "rpcholesky", "cg": "identity"}[method]
+    if method in ("pcg-nystrom", "pcg-rpcholesky", "pcg-rff", "cg"):
+        precond = {
+            "pcg-nystrom": "nystrom", "pcg-rpcholesky": "rpcholesky",
+            "pcg-rff": "rff", "cg": "identity",
+        }[method]
         res = pcg.solve_pcg(problem, precond=precond, **kw)
         return SolveOutput(
             method=method,

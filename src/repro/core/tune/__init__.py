@@ -37,7 +37,7 @@ Quickstart (the full walkthrough lives in docs/tuning.md):
 >>> res = tune(KRRProblem(x=x, y=y), sigmas=(0.5, 2.0),
 ...            lams=(1e-3, 1e-2, 1e-1), folds=3, rank=16, max_iters=60, seed=0)
 >>> sorted(res.best)
-['backend', 'cv_mse', 'folds', 'kernel', 'lam_unscaled', 'sigma']
+['backend', 'cv_mse', 'folds', 'kernel', 'lam_unscaled', 'precision', 'sigma']
 >>> res.best["sigma"] in (0.5, 2.0) and res.best["lam_unscaled"] in (1e-3, 1e-2, 1e-1)
 True
 >>> len(res.records)  # one record per (sigma, lam) candidate

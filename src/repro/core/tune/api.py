@@ -313,6 +313,7 @@ def run_search(
         "sigma": best_rec["sigma"],
         "lam_unscaled": best_rec["lam_unscaled"],
         "backend": problem.backend,
+        "precision": problem.precision,
         "folds": folds,
         "cv_mse": best_rec["cv_mse"],
     }
@@ -323,6 +324,7 @@ def run_search(
             "kernel": best["kernel"], "sigma": best["sigma"],
             "weights": best["weights"],
             "lam_unscaled": best["lam_unscaled"], "backend": best["backend"],
+            "precision": best["precision"],
             "folds": best["folds"], "cv_mse": best["cv_mse"],
         }
     # what the per-candidate loop would have cost, in full-K sweeps: each of

@@ -172,6 +172,7 @@ def operator_for(problem: KRRProblem, sigma: float, mesh, weights=None) -> Any:
     return ShardedKernelOperator.bind(
         mesh, problem.x, kernel=problem.kernel, sigma=float(sigma),
         backend=problem.backend, weights=weights,
+        precision=problem.precision,
     )
 
 

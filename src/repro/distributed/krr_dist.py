@@ -55,6 +55,7 @@ from repro.core.nystrom import nystrom_from_sketch
 from repro.core.operator import as_multirhs, maybe_squeeze
 from repro.distributed.jax_compat import shard_map
 from repro.distributed.sharded_operator import ShardedKernelOperator
+from repro.kernels.precision import PRECISIONS
 
 BACKENDS = ("auto", "xla", "pallas", "interpret")
 
@@ -90,6 +91,7 @@ class DistKRRConfig:
     #   preconditioned eigenvector varies little between iterations
     powering_warm_iters: int = 3
     backend: str = "xla"  # local compute backend inside shards
+    precision: str = "f32"  # kernel tile-compute policy: "f32" | "bf16"
 
     def __post_init__(self) -> None:
         # fail fast with the accepted values, in the solver_api
@@ -118,6 +120,11 @@ class DistKRRConfig:
             raise ValueError(
                 f"DistKRRConfig.backend = {self.backend!r} invalid; "
                 f"accepted: {BACKENDS}"
+            )
+        if self.precision not in PRECISIONS:
+            raise ValueError(
+                f"DistKRRConfig.precision = {self.precision!r} invalid; "
+                f"accepted: {PRECISIONS}"
             )
         sig = self.sigma if isinstance(self.sigma, tuple) else (self.sigma,)
         if not all(s > 0 for s in sig):
@@ -152,7 +159,7 @@ def _operator_for(mesh: Mesh, cfg: DistKRRConfig) -> ShardedKernelOperator:
     """Unbound operator carrying (mesh, kernel config) for the step body."""
     return ShardedKernelOperator(
         mesh=mesh, kernel=cfg.kernel, sigma=cfg.sigma, backend=cfg.backend,
-        weights=cfg.weights,
+        weights=cfg.weights, precision=cfg.precision,
     )
 
 
@@ -303,6 +310,7 @@ def _bind(problem: KRRProblem, mesh: Mesh, backend: str) -> ShardedKernelOperato
     return ShardedKernelOperator.bind(
         mesh, problem.x, kernel=problem.kernel, sigma=problem.sigma,
         backend=backend, weights=problem.weights,
+        precision=problem.precision,
     )
 
 
@@ -338,7 +346,7 @@ def solve_askotch_dist(
         lam_unscaled=problem.lam_unscaled,
         block_size=b, rank=min(rank, b), heads=problem.t,
         accelerated=accelerated, mu=mu, nu=nu, powering_iters=powering_iters,
-        backend=backend,
+        backend=backend, precision=problem.precision,
     )
     step, sh = make_dist_askotch_step(mesh, cfg)
     bound = _bind(problem, mesh, backend)

@@ -89,6 +89,7 @@ class ShardedKernelOperator:
     chunk_a: int = 4096
     chunk_b: int = 8192
     weights: tuple[float, ...] | None = None  # multi-kernel combination
+    precision: str = "f32"  # tile-compute policy: "f32" | "bf16"
 
     def __post_init__(self) -> None:
         if isinstance(self.kernel, list):
@@ -195,6 +196,7 @@ class ShardedKernelOperator:
         return make_operator(
             pts, kernel=self.kernel, sigma=self.sigma, weights=self.weights,
             backend=self.backend, chunk_a=self.chunk_a, chunk_b=self.chunk_b,
+            precision=self.precision,
         )
 
     # -- derived operators ---------------------------------------------------
@@ -204,7 +206,7 @@ class ShardedKernelOperator:
         return ShardedKernelOperator.bind(
             self.mesh, x_new, kernel=self.kernel, sigma=self.sigma,
             backend=self.backend, chunk_a=self.chunk_a, chunk_b=self.chunk_b,
-            weights=self.weights,
+            weights=self.weights, precision=self.precision,
         )
 
     def restrict(self, idx: jax.Array) -> KernelOperator:

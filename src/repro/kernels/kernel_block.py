@@ -16,19 +16,20 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.kernel_matvec import _apply_kernel, _distance_tile
+from repro.kernels.kernel_matvec import _apply_kernel, _cast_tiles, _distance_tile
 
 
 def _block_body(a_ref, b_ref, o_ref, *, kernel: str, sigma: float, dchunk: int):
-    a = a_ref[...].astype(jnp.float32)
-    b = b_ref[...].astype(jnp.float32)
-    dist = _distance_tile(a, b, kernel, dchunk)
+    # operand tiles at policy width (f32/bf16); distance + map + output f32
+    dist = _distance_tile(a_ref[...], b_ref[...], kernel, dchunk)
     o_ref[...] = _apply_kernel(dist, kernel, sigma)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("kernel", "sigma", "bm", "bn", "dchunk", "interpret"),
+    static_argnames=(
+        "kernel", "sigma", "bm", "bn", "dchunk", "interpret", "precision",
+    ),
 )
 def kernel_block_pallas(
     a: jax.Array,
@@ -40,8 +41,13 @@ def kernel_block_pallas(
     bn: int = 256,
     dchunk: int = 32,
     interpret: bool = False,
+    precision: str = "f32",
 ) -> jax.Array:
-    """Materialize K(a, b): (m, d), (n, d) -> (m, n) f32."""
+    """Materialize K(a, b): (m, d), (n, d) -> (m, n) f32.
+
+    ``precision="bf16"`` loads the A/B tiles in bf16; the distance
+    accumulation and the materialized block stay f32.
+    """
     m, d = a.shape
     n = b.shape[0]
     bm = min(bm, max(8, m))
@@ -49,6 +55,7 @@ def kernel_block_pallas(
     mp, np_, dp = -(-m // bm) * bm, -(-n // bn) * bn, -(-d // dchunk) * dchunk
     a_p = jnp.pad(a, ((0, mp - m), (0, dp - d)))
     b_p = jnp.pad(b, ((0, np_ - n), (0, dp - d)))
+    a_p, b_p = _cast_tiles(precision, a_p, b_p)
 
     out = pl.pallas_call(
         functools.partial(

@@ -51,7 +51,14 @@ def _apply_kernel(d2_or_d1: jax.Array, kernel: str, sigma: float) -> jax.Array:
 
 
 def _distance_tile(a: jax.Array, b: jax.Array, kernel: str, dchunk: int) -> jax.Array:
-    """(bm, bn) distance tile: squared-L2 (rbf/matern52) or L1 (laplacian)."""
+    """(bm, bn) f32 distance tile: squared-L2 (rbf/matern52) or L1 (laplacian).
+
+    Accepts raw operand tiles in f32 OR bf16 — the mixed-precision contract:
+    the MXU contraction takes the operands at their stored width with
+    ``preferred_element_type=f32`` (f32 accumulation), the norms and the L1
+    slab reduction upcast to f32 first (bf16 -> f32 is exact per element).
+    The returned tile is always f32.
+    """
     if kernel == "laplacian":
         bm, d = a.shape
         bn = b.shape[0]
@@ -60,11 +67,16 @@ def _distance_tile(a: jax.Array, b: jax.Array, kernel: str, dchunk: int) -> jax.
         def body(c, acc):
             a_s = lax.dynamic_slice(a, (0, c * dchunk), (bm, dchunk))
             b_s = lax.dynamic_slice(b, (0, c * dchunk), (bn, dchunk))
-            return acc + jnp.sum(jnp.abs(a_s[:, None, :] - b_s[None, :, :]), axis=-1)
+            diff = a_s[:, None, :].astype(jnp.float32) - b_s[None, :, :].astype(
+                jnp.float32
+            )
+            return acc + jnp.sum(jnp.abs(diff), axis=-1)
 
         return lax.fori_loop(0, nchunks, body, jnp.zeros((bm, bn), jnp.float32))
-    aa = jnp.sum(a * a, axis=-1, keepdims=True)  # (bm, 1)
-    bb = jnp.sum(b * b, axis=-1, keepdims=True).T  # (1, bn)
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    aa = jnp.sum(af * af, axis=-1, keepdims=True)  # (bm, 1)
+    bb = jnp.sum(bf * bf, axis=-1, keepdims=True).T  # (1, bn)
     ab = jax.lax.dot_general(
         a,
         b,
@@ -74,6 +86,14 @@ def _distance_tile(a: jax.Array, b: jax.Array, kernel: str, dchunk: int) -> jax.
     return jnp.maximum(aa + bb - 2.0 * ab, 0.0)
 
 
+def _cast_tiles(precision: str, *arrays: jax.Array) -> tuple[jax.Array, ...]:
+    """Host-side tile dtype for the requested precision policy: bf16 halves
+    the HBM/VMEM traffic of every A/B/V tile; f32 is the identity."""
+    if precision == "bf16":
+        return tuple(x.astype(jnp.bfloat16) for x in arrays)
+    return arrays
+
+
 def _matvec_body(a_ref, b_ref, v_ref, o_ref, *, kernel: str, sigma: float, dchunk: int):
     j = pl.program_id(1)
 
@@ -81,13 +101,15 @@ def _matvec_body(a_ref, b_ref, v_ref, o_ref, *, kernel: str, sigma: float, dchun
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    a = a_ref[...].astype(jnp.float32)
-    b = b_ref[...].astype(jnp.float32)
-    dist = _distance_tile(a, b, kernel, dchunk)
+    # tiles arrive at policy width (f32 or bf16); the distance tile and the
+    # kernel map are f32, the second matmul runs at policy width with f32
+    # accumulation (preferred_element_type) into the resident o_ref tile
+    v = v_ref[...]
+    dist = _distance_tile(a_ref[...], b_ref[...], kernel, dchunk)
     ktile = _apply_kernel(dist, kernel, sigma)
     o_ref[...] += jax.lax.dot_general(
-        ktile,
-        v_ref[...].astype(jnp.float32),
+        ktile.astype(v.dtype),
+        v,
         (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
@@ -95,7 +117,9 @@ def _matvec_body(a_ref, b_ref, v_ref, o_ref, *, kernel: str, sigma: float, dchun
 
 @functools.partial(
     jax.jit,
-    static_argnames=("kernel", "sigma", "bm", "bn", "dchunk", "interpret"),
+    static_argnames=(
+        "kernel", "sigma", "bm", "bn", "dchunk", "interpret", "precision",
+    ),
 )
 def kernel_matvec_pallas(
     a: jax.Array,
@@ -108,8 +132,14 @@ def kernel_matvec_pallas(
     bn: int = 256,
     dchunk: int = 32,
     interpret: bool = False,
+    precision: str = "f32",
 ) -> jax.Array:
-    """out = K(a, b) @ v.  a: (m, d), b: (n, d), v: (n, k)|(n,) -> (m, k)|(m,)."""
+    """out = K(a, b) @ v.  a: (m, d), b: (n, d), v: (n, k)|(n,) -> (m, k)|(m,).
+
+    ``precision="bf16"`` loads the A/B/V tiles in bf16 (half the HBM/VMEM
+    traffic, 2x MXU rate on TPU) while the distance accumulation, kernel map
+    and output accumulator stay f32; the output is f32 either way.
+    """
     squeeze = v.ndim == 1
     if squeeze:
         v = v[:, None]
@@ -127,6 +157,7 @@ def kernel_matvec_pallas(
     a_p = jnp.pad(a, ((0, mp - m), (0, dp - d)))
     b_p = jnp.pad(b, ((0, np_ - n), (0, dp - d)))
     v_p = jnp.pad(v, ((0, np_ - n), (0, kvp - kv)))
+    a_p, b_p, v_p = _cast_tiles(precision, a_p, b_p, v_p)
 
     out = pl.pallas_call(
         functools.partial(

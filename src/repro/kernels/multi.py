@@ -32,7 +32,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-from repro.kernels.kernel_matvec import _apply_kernel, _distance_tile
+from repro.kernels.kernel_matvec import _apply_kernel, _cast_tiles, _distance_tile
 
 
 def _tiles(a, b, kernels, dchunk):
@@ -63,18 +63,19 @@ def _multi_matvec_body(
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    a = a_ref[...].astype(jnp.float32)
-    b = b_ref[...].astype(jnp.float32)
-    v = v_ref[...].astype(jnp.float32)
-    d2, d1 = _tiles(a, b, kernels, dchunk)
+    # tiles at policy width (f32/bf16); distance tiles, weight row products
+    # and the accumulator stay f32, the per-kernel matmul runs at policy
+    # width with f32 accumulation
+    v = v_ref[...]
+    d2, d1 = _tiles(a_ref[...], b_ref[...], kernels, dchunk)
     acc = jnp.zeros_like(o_ref)
     for i, (kn, sg) in enumerate(zip(kernels, sigmas)):
         ktile = _tile_for(kn, d2, d1, sg)
         # w_ic (K_i v)[:, c] == (K_i (v * w_i))[:, c]: pre-scaling v per
         # kernel lets one accumulator serve every kernel and column
         acc += lax.dot_general(
-            ktile,
-            v * w_ref[i, :][None, :],
+            ktile.astype(v.dtype),
+            (v * w_ref[i, :][None, :]).astype(v.dtype),
             (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
@@ -88,29 +89,25 @@ def _components_body(a_ref, b_ref, v_ref, o_ref, *, kernels, sigmas, dchunk):
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    a = a_ref[...].astype(jnp.float32)
-    b = b_ref[...].astype(jnp.float32)
-    v = v_ref[...].astype(jnp.float32)
-    d2, d1 = _tiles(a, b, kernels, dchunk)
+    v = v_ref[...]
+    d2, d1 = _tiles(a_ref[...], b_ref[...], kernels, dchunk)
     for i, (kn, sg) in enumerate(zip(kernels, sigmas)):
         ktile = _tile_for(kn, d2, d1, sg)
         o_ref[i, ...] += lax.dot_general(
-            ktile, v, (((1,), (0,)), ((), ())),
+            ktile.astype(v.dtype), v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
 
 
 def _block_multi_body(a_ref, b_ref, o_ref, *, kernels, sigmas, weights, dchunk):
-    a = a_ref[...].astype(jnp.float32)
-    b = b_ref[...].astype(jnp.float32)
-    d2, d1 = _tiles(a, b, kernels, dchunk)
+    d2, d1 = _tiles(a_ref[...], b_ref[...], kernels, dchunk)
     acc = jnp.zeros_like(o_ref)
     for kn, sg, w in zip(kernels, sigmas, weights):
         acc += w * _tile_for(kn, d2, d1, sg)
     o_ref[...] = acc
 
 
-def _pad_multi(a, b, v, bm, bn, dchunk, interpret):
+def _pad_multi(a, b, v, bm, bn, dchunk, interpret, precision="f32"):
     m, d = a.shape
     n = b.shape[0]
     kv = v.shape[1]
@@ -121,12 +118,15 @@ def _pad_multi(a, b, v, bm, bn, dchunk, interpret):
     a_p = jnp.pad(a, ((0, mp - m), (0, dp - d)))
     b_p = jnp.pad(b, ((0, np_ - n), (0, dp - d)))
     v_p = jnp.pad(v, ((0, np_ - n), (0, kvp - kv)))
+    a_p, b_p, v_p = _cast_tiles(precision, a_p, b_p, v_p)
     return a_p, b_p, v_p, (m, n, kv, bm, bn, mp, np_, dp, kvp)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("kernels", "sigmas", "bm", "bn", "dchunk", "interpret"),
+    static_argnames=(
+        "kernels", "sigmas", "bm", "bn", "dchunk", "interpret", "precision",
+    ),
 )
 def kernel_matvec_multi_pallas(
     a: jax.Array,
@@ -140,13 +140,18 @@ def kernel_matvec_multi_pallas(
     bn: int = 256,
     dchunk: int = 32,
     interpret: bool = False,
+    precision: str = "f32",
 ) -> jax.Array:
-    """out = (sum_i w_i K_i(a, b)) @ v; weights (q,) or per-column (q, kv)."""
+    """out = (sum_i w_i K_i(a, b)) @ v; weights (q,) or per-column (q, kv).
+
+    ``precision="bf16"`` loads the A/B/V tiles in bf16; the weight tile,
+    distance tiles and accumulator stay f32 (output is f32 either way).
+    """
     squeeze = v.ndim == 1
     if squeeze:
         v = v[:, None]
     a_p, b_p, v_p, (m, n, kv, bm, bn, mp, np_, dp, kvp) = _pad_multi(
-        a, b, v, bm, bn, dchunk, interpret
+        a, b, v, bm, bn, dchunk, interpret, precision
     )
     q = len(kernels)
     w2 = jnp.broadcast_to(
@@ -179,7 +184,9 @@ def kernel_matvec_multi_pallas(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("kernels", "sigmas", "bm", "bn", "dchunk", "interpret"),
+    static_argnames=(
+        "kernels", "sigmas", "bm", "bn", "dchunk", "interpret", "precision",
+    ),
 )
 def kernel_matvec_components_pallas(
     a: jax.Array,
@@ -192,13 +199,17 @@ def kernel_matvec_components_pallas(
     bn: int = 256,
     dchunk: int = 32,
     interpret: bool = False,
+    precision: str = "f32",
 ) -> jax.Array:
-    """Stacked per-kernel products: out[i] = K_i(a, b) @ v, shape (q, m[, kv])."""
+    """Stacked per-kernel products: out[i] = K_i(a, b) @ v, shape (q, m[, kv]).
+
+    ``precision="bf16"`` loads the A/B/V tiles in bf16 with f32 accumulation.
+    """
     squeeze = v.ndim == 1
     if squeeze:
         v = v[:, None]
     a_p, b_p, v_p, (m, n, kv, bm, bn, mp, np_, dp, kvp) = _pad_multi(
-        a, b, v, bm, bn, dchunk, interpret
+        a, b, v, bm, bn, dchunk, interpret, precision
     )
     q = len(kernels)
 
@@ -224,6 +235,7 @@ def kernel_matvec_components_pallas(
     jax.jit,
     static_argnames=(
         "kernels", "sigmas", "weights", "bm", "bn", "dchunk", "interpret",
+        "precision",
     ),
 )
 def kernel_block_multi_pallas(
@@ -237,8 +249,12 @@ def kernel_block_multi_pallas(
     bn: int = 256,
     dchunk: int = 32,
     interpret: bool = False,
+    precision: str = "f32",
 ) -> jax.Array:
-    """Materialize sum_i w_i K_i(a, b): (m, d), (n, d) -> (m, n) f32."""
+    """Materialize sum_i w_i K_i(a, b): (m, d), (n, d) -> (m, n) f32.
+
+    ``precision="bf16"`` loads the A/B tiles in bf16 with f32 accumulation.
+    """
     m, d = a.shape
     n = b.shape[0]
     bm = min(bm, max(8, m))
@@ -246,6 +262,7 @@ def kernel_block_multi_pallas(
     mp, np_, dp = -(-m // bm) * bm, -(-n // bn) * bn, -(-d // dchunk) * dchunk
     a_p = jnp.pad(a, ((0, mp - m), (0, dp - d)))
     b_p = jnp.pad(b, ((0, np_ - n), (0, dp - d)))
+    a_p, b_p = _cast_tiles(precision, a_p, b_p)
 
     out = pl.pallas_call(
         functools.partial(

@@ -11,9 +11,21 @@ All entry points share the contract: never materialize K(a, b) beyond one
 ``(n, t)`` v rides the same kernel tiles as a ``(n,)`` v, which is what makes
 one-vs-all (t-head) solves cost one kernel sweep instead of t.
 
+Precision policy: every entry point takes ``precision="f32"|"bf16"``.
+``"bf16"`` runs the tile/chunk traffic (A/B/V loads + the kernel-times-value
+matmul) in bf16 with f32 accumulation — half the HBM/VMEM bytes and the 2x
+MXU rate on TPU — while distances, kernel maps and outputs stay f32.
+``"f32"`` is bit-identical to the pre-policy behavior.
+
+Sigma canonicalization: dispatch owns ONE cast — ``sigma = float(sigma)``
+(tuple-of-float for the multi ops) — so numpy/jnp scalars, python ints and
+0-d arrays all reach both backends identically: the Pallas path needs a
+hashable static, the xla path wraps the float in ``jnp.float32`` so a bf16
+input can never promote or demote the kernel bandwidth.
+
 Solvers should not call these directly; they go through
 ``repro.core.operator.KernelOperator``, which owns the (kernel, sigma,
-backend, chunking) configuration.
+backend, chunking, precision) configuration.
 """
 
 from __future__ import annotations
@@ -24,6 +36,13 @@ import jax.numpy as jnp
 from repro.kernels import multi, ref
 from repro.kernels.kernel_block import kernel_block_pallas
 from repro.kernels.kernel_matvec import kernel_matvec_pallas
+from repro.kernels.precision import PRECISIONS, check_precision
+
+__all__ = [
+    "PRECISIONS", "check_precision", "resolve_backend",
+    "kernel_matvec", "kernel_block",
+    "kernel_matvec_multi", "kernel_matvec_components", "kernel_block_multi",
+]
 
 
 def resolve_backend(backend: str) -> str:
@@ -43,18 +62,23 @@ def kernel_matvec(
     backend: str = "auto",
     chunk_a: int = 4096,
     chunk_b: int = 8192,
+    precision: str = "f32",
 ) -> jax.Array:
     """out = K(a, b) @ v without materializing K.
 
     v: (n,) -> (m,) or (n, t) -> (m, t); all t columns share the kernel tiles.
     """
     backend = resolve_backend(backend)
+    precision = check_precision(precision)
+    sigma = float(sigma)
     if backend == "xla":
         return ref.kernel_matvec(
-            a, b, v, jnp.float32(sigma), kernel=kernel, chunk_a=chunk_a, chunk_b=chunk_b
+            a, b, v, jnp.float32(sigma), kernel=kernel, chunk_a=chunk_a,
+            chunk_b=chunk_b, precision=precision,
         )
     return kernel_matvec_pallas(
-        a, b, v, kernel=kernel, sigma=float(sigma), interpret=(backend == "interpret")
+        a, b, v, kernel=kernel, sigma=sigma,
+        interpret=(backend == "interpret"), precision=precision,
     )
 
 
@@ -65,13 +89,19 @@ def kernel_block(
     kernel: str = "rbf",
     sigma: float = 1.0,
     backend: str = "auto",
+    precision: str = "f32",
 ) -> jax.Array:
     """Materialize K(a, b) (use for small/medium blocks only)."""
     backend = resolve_backend(backend)
+    precision = check_precision(precision)
+    sigma = float(sigma)
     if backend == "xla":
-        return ref.kernel_block(a, b, jnp.float32(sigma), kernel=kernel)
+        return ref.kernel_block(
+            a, b, jnp.float32(sigma), kernel=kernel, precision=precision
+        )
     return kernel_block_pallas(
-        a, b, kernel=kernel, sigma=float(sigma), interpret=(backend == "interpret")
+        a, b, kernel=kernel, sigma=sigma,
+        interpret=(backend == "interpret"), precision=precision,
     )
 
 
@@ -95,23 +125,25 @@ def kernel_matvec_multi(
     backend: str = "auto",
     chunk_a: int = 4096,
     chunk_b: int = 8192,
+    precision: str = "f32",
 ) -> jax.Array:
     """out = (sum_i w_i K_i(a, b)) @ v without materializing any K_i.
 
     v: (n,) -> (m,) or (n, t) -> (m, t); weights (q,) or per-column (q, t).
     """
     backend = resolve_backend(backend)
+    precision = check_precision(precision)
     kernels = tuple(kernels)
+    sigmas = tuple(float(s) for s in sigmas)
     w = jnp.asarray(weights, jnp.float32)
     if backend == "xla":
         return ref.kernel_matvec_multi(
             a, b, v, jnp.asarray(sigmas, jnp.float32), w, kernels=kernels,
-            chunk_a=chunk_a, chunk_b=chunk_b,
+            chunk_a=chunk_a, chunk_b=chunk_b, precision=precision,
         )
     return multi.kernel_matvec_multi_pallas(
-        a, b, v, w, kernels=kernels,
-        sigmas=tuple(float(s) for s in sigmas),
-        interpret=(backend == "interpret"),
+        a, b, v, w, kernels=kernels, sigmas=sigmas,
+        interpret=(backend == "interpret"), precision=precision,
     )
 
 
@@ -125,6 +157,7 @@ def kernel_matvec_components(
     backend: str = "auto",
     chunk_a: int = 4096,
     chunk_b: int = 8192,
+    precision: str = "f32",
 ) -> jax.Array:
     """Stacked per-kernel products (q, m[, t]): out[i] = K_i(a, b) @ v.
 
@@ -132,15 +165,17 @@ def kernel_matvec_components(
     multi-kernel tuner come from a single call).
     """
     backend = resolve_backend(backend)
+    precision = check_precision(precision)
     kernels = tuple(kernels)
+    sigmas = tuple(float(s) for s in sigmas)
     if backend == "xla":
         return ref.kernel_matvec_components(
             a, b, v, jnp.asarray(sigmas, jnp.float32), kernels=kernels,
-            chunk_a=chunk_a, chunk_b=chunk_b,
+            chunk_a=chunk_a, chunk_b=chunk_b, precision=precision,
         )
     return multi.kernel_matvec_components_pallas(
-        a, b, v, kernels=kernels, sigmas=tuple(float(s) for s in sigmas),
-        interpret=(backend == "interpret"),
+        a, b, v, kernels=kernels, sigmas=sigmas,
+        interpret=(backend == "interpret"), precision=precision,
     )
 
 
@@ -152,17 +187,21 @@ def kernel_block_multi(
     sigmas: tuple[float, ...],
     weights: tuple[float, ...],
     backend: str = "auto",
+    precision: str = "f32",
 ) -> jax.Array:
     """Materialize sum_i w_i K_i(a, b) (small/medium blocks only)."""
     backend = resolve_backend(backend)
+    precision = check_precision(precision)
     kernels = tuple(kernels)
+    sigmas = tuple(float(s) for s in sigmas)
     if backend == "xla":
         return ref.kernel_block_multi(
             a, b, jnp.asarray(sigmas, jnp.float32),
             jnp.asarray(weights, jnp.float32), kernels=kernels,
+            precision=precision,
         )
     return multi.kernel_block_multi_pallas(
-        a, b, kernels=kernels, sigmas=tuple(float(s) for s in sigmas),
+        a, b, kernels=kernels, sigmas=sigmas,
         weights=tuple(float(w) for w in weights),
-        interpret=(backend == "interpret"),
+        interpret=(backend == "interpret"), precision=precision,
     )

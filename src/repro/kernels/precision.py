@@ -1,0 +1,26 @@
+"""The kernel tile-compute precision policy — shared vocabulary and validation.
+
+Dependency-free on purpose: both the kernel dispatch (``kernels/ops.py``) and
+the solver API (``core/solver_api.py``) validate precision strings, and the
+import chains between ``repro.kernels`` and ``repro.core`` run in both
+directions, so the policy's single source of truth lives below both.
+
+``"f32"`` — tiles, distances, kernel maps and accumulators all f32 (the
+bit-identical default).  ``"bf16"`` — A/B/V tile/chunk traffic and the
+kernel-times-value matmul run in bf16 with f32 accumulation; distances,
+kernel maps, outputs and every solver-internal quantity stay f32 (the
+f32-islands rule, docs/architecture.md "Precision policy").
+"""
+
+from __future__ import annotations
+
+PRECISIONS = ("f32", "bf16")
+
+
+def check_precision(precision: str) -> str:
+    """Validate a precision-policy string ("f32" | "bf16") and return it."""
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"unknown precision {precision!r}; expected one of {PRECISIONS}"
+        )
+    return precision

@@ -41,6 +41,34 @@ def _needs_l1(kernels: tuple[str, ...]) -> bool:
     return "laplacian" in kernels
 
 
+def _cast_chunks(precision: str, *arrays: jax.Array) -> tuple[jax.Array, ...]:
+    """Chunk dtype for the requested precision policy — the streaming mirror
+    of the Pallas tile cast: bf16 halves the bytes every scanned chunk moves.
+
+    The existing distance helpers (``core.kernels._sq_dists`` / ``_l1_dists``)
+    upcast their operands to f32 before accumulating, and bf16 -> f32 is
+    exact per element, so bf16 chunks through those helpers reproduce the
+    "bf16 operands, f32 accumulation" MXU contract bit-for-bit in spirit.
+    """
+    if precision == "bf16":
+        return tuple(x.astype(jnp.bfloat16) for x in arrays)
+    return arrays
+
+
+def _acc_dot(ktile: jax.Array, v_blk: jax.Array, precision: str) -> jax.Array:
+    """ktile @ v_blk under the precision policy: the bf16 path downcasts the
+    kernel tile to bf16 (matching the Pallas second matmul) and accumulates
+    in f32 via ``preferred_element_type``."""
+    if precision == "bf16":
+        return lax.dot_general(
+            ktile.astype(jnp.bfloat16),
+            v_blk.astype(jnp.bfloat16),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    return ktile @ v_blk
+
+
 def _pad_rows(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
     n = x.shape[0]
     pad = (-n) % multiple
@@ -49,7 +77,9 @@ def _pad_rows(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
     return x, n
 
 
-@functools.partial(jax.jit, static_argnames=("kernel", "chunk_a", "chunk_b"))
+@functools.partial(
+    jax.jit, static_argnames=("kernel", "chunk_a", "chunk_b", "precision")
+)
 def kernel_matvec(
     a: jax.Array,
     b: jax.Array,
@@ -59,11 +89,14 @@ def kernel_matvec(
     kernel: str = "rbf",
     chunk_a: int = 4096,
     chunk_b: int = 8192,
+    precision: str = "f32",
 ) -> jax.Array:
     """out = K(a, b) @ v, streamed.
 
     a: (m, d), b: (n, d), v: (n, k) or (n,) -> out (m, k) or (m,).
     Memory high-water mark is O(chunk_a * chunk_b) instead of O(m * n).
+    ``precision="bf16"`` streams the a/b/v chunks in bf16 with f32 distance
+    and output accumulation (the Pallas tile contract); output stays f32.
     """
     kfn = kernel_fn(kernel)
     squeeze = v.ndim == 1
@@ -85,13 +118,18 @@ def kernel_matvec(
     ap, m0 = _pad_rows(a, chunk_a)
     na = ap.shape[0] // chunk_a
     a_chunks = ap.reshape(na, chunk_a, a.shape[1])
+    a_chunks, b_chunks, v_chunks = _cast_chunks(
+        precision, a_chunks, b_chunks, v_chunks
+    )
+
+    acc_dt = jnp.promote_types(jnp.promote_types(a.dtype, v.dtype), jnp.float32)
 
     def row_block(a_blk):
         def body(acc, bv):
             b_blk, v_blk = bv
-            return acc + kfn(a_blk, b_blk, sigma) @ v_blk, None
+            return acc + _acc_dot(kfn(a_blk, b_blk, sigma), v_blk, precision), None
 
-        init = jnp.zeros((a_blk.shape[0], v.shape[1]), jnp.float32)
+        init = jnp.zeros((a_blk.shape[0], v.shape[1]), acc_dt)
         out, _ = lax.scan(body, init, (b_chunks, v_chunks))
         return out
 
@@ -99,11 +137,20 @@ def kernel_matvec(
     return out[:, 0] if squeeze else out
 
 
-@functools.partial(jax.jit, static_argnames=("kernel",))
+@functools.partial(jax.jit, static_argnames=("kernel", "precision"))
 def kernel_block(
-    a: jax.Array, b: jax.Array, sigma: jax.Array, *, kernel: str = "rbf"
+    a: jax.Array,
+    b: jax.Array,
+    sigma: jax.Array,
+    *,
+    kernel: str = "rbf",
+    precision: str = "f32",
 ) -> jax.Array:
-    """Materialize K(a, b).  Reference for the Pallas block-build kernel."""
+    """Materialize K(a, b).  Reference for the Pallas block-build kernel.
+    ``precision="bf16"`` rounds the operands to bf16 first; the distance
+    accumulation (``core.kernels`` helpers upcast to f32) and the block
+    stay f32."""
+    a, b = _cast_chunks(precision, a, b)
     return kernel_fn(kernel)(a, b, sigma)
 
 
@@ -138,7 +185,9 @@ def _dist_tiles(a_blk, b_blk, kernels):
     return d2, d1
 
 
-@functools.partial(jax.jit, static_argnames=("kernels", "chunk_a", "chunk_b"))
+@functools.partial(
+    jax.jit, static_argnames=("kernels", "chunk_a", "chunk_b", "precision")
+)
 def kernel_matvec_multi(
     a: jax.Array,
     b: jax.Array,
@@ -149,6 +198,7 @@ def kernel_matvec_multi(
     kernels: tuple[str, ...],
     chunk_a: int = 4096,
     chunk_b: int = 8192,
+    precision: str = "f32",
 ) -> jax.Array:
     """out = (sum_i w_i K_i(a, b)) @ v, streamed — one data sweep for all q.
 
@@ -157,6 +207,8 @@ def kernel_matvec_multi(
     system of weight vector w[:, c]).  Per-column weights use the identity
     ``w_ic (K_i v)[:, c] = (K_i (v * w_i))[:, c]``: v is pre-scaled per
     kernel, so one (m, t) accumulator serves every kernel and column.
+    ``precision="bf16"`` streams a/b/v chunks in bf16 with f32 accumulation;
+    the weight rows stay f32 and the output is f32 either way.
     """
     squeeze = v.ndim == 1
     if squeeze:
@@ -164,7 +216,11 @@ def kernel_matvec_multi(
     a_chunks, b_chunks, v_chunks, na, chunk_a, m0 = _multi_chunks(
         a, b, v, chunk_a, chunk_b
     )
+    a_chunks, b_chunks, v_chunks = _cast_chunks(
+        precision, a_chunks, b_chunks, v_chunks
+    )
     w_rows = weights[:, None, :] if weights.ndim == 2 else weights[:, None, None]
+    acc_dt = jnp.promote_types(jnp.promote_types(a.dtype, v.dtype), jnp.float32)
 
     def row_block(a_blk):
         def body(acc, bv):
@@ -172,10 +228,10 @@ def kernel_matvec_multi(
             d2, d1 = _dist_tiles(a_blk, b_blk, kernels)
             for i, kn in enumerate(kernels):
                 ktile = tile_from_dists(kn, d2, d1, sigmas[i])
-                acc = acc + ktile @ (v_blk * w_rows[i])
+                acc = acc + _acc_dot(ktile, v_blk * w_rows[i], precision)
             return acc, None
 
-        init = jnp.zeros((a_blk.shape[0], v.shape[1]), jnp.float32)
+        init = jnp.zeros((a_blk.shape[0], v.shape[1]), acc_dt)
         out, _ = lax.scan(body, init, (b_chunks, v_chunks))
         return out
 
@@ -183,7 +239,9 @@ def kernel_matvec_multi(
     return out[:, 0] if squeeze else out
 
 
-@functools.partial(jax.jit, static_argnames=("kernels", "chunk_a", "chunk_b"))
+@functools.partial(
+    jax.jit, static_argnames=("kernels", "chunk_a", "chunk_b", "precision")
+)
 def kernel_matvec_components(
     a: jax.Array,
     b: jax.Array,
@@ -193,12 +251,14 @@ def kernel_matvec_components(
     kernels: tuple[str, ...],
     chunk_a: int = 4096,
     chunk_b: int = 8192,
+    precision: str = "f32",
 ) -> jax.Array:
     """Stacked per-kernel products (q, m[, t]): out[i] = K_i(a, b) @ v.
 
     The per-kernel Nystrom sketches of the multi-kernel tuner come from ONE
     call: the distance tile is shared, only the cheap elementwise maps and
-    matmuls repeat per kernel.
+    matmuls repeat per kernel.  ``precision="bf16"`` streams the chunks in
+    bf16 with f32 accumulation.
     """
     squeeze = v.ndim == 1
     if squeeze:
@@ -206,19 +266,24 @@ def kernel_matvec_components(
     a_chunks, b_chunks, v_chunks, na, chunk_a, m0 = _multi_chunks(
         a, b, v, chunk_a, chunk_b
     )
+    a_chunks, b_chunks, v_chunks = _cast_chunks(
+        precision, a_chunks, b_chunks, v_chunks
+    )
     q = len(kernels)
+    acc_dt = jnp.promote_types(jnp.promote_types(a.dtype, v.dtype), jnp.float32)
 
     def row_block(a_blk):
         def body(acc, bv):
             b_blk, v_blk = bv
             d2, d1 = _dist_tiles(a_blk, b_blk, kernels)
             outs = [
-                acc[i] + tile_from_dists(kn, d2, d1, sigmas[i]) @ v_blk
+                acc[i]
+                + _acc_dot(tile_from_dists(kn, d2, d1, sigmas[i]), v_blk, precision)
                 for i, kn in enumerate(kernels)
             ]
             return jnp.stack(outs), None
 
-        init = jnp.zeros((q, a_blk.shape[0], v.shape[1]), jnp.float32)
+        init = jnp.zeros((q, a_blk.shape[0], v.shape[1]), acc_dt)
         out, _ = lax.scan(body, init, (b_chunks, v_chunks))
         return out
 
@@ -227,7 +292,7 @@ def kernel_matvec_components(
     return out[:, :, 0] if squeeze else out
 
 
-@functools.partial(jax.jit, static_argnames=("kernels",))
+@functools.partial(jax.jit, static_argnames=("kernels", "precision"))
 def kernel_block_multi(
     a: jax.Array,
     b: jax.Array,
@@ -235,8 +300,12 @@ def kernel_block_multi(
     weights: jax.Array,
     *,
     kernels: tuple[str, ...],
+    precision: str = "f32",
 ) -> jax.Array:
-    """Materialize sum_i w_i K_i(a, b) with the distance tiles computed once."""
+    """Materialize sum_i w_i K_i(a, b) with the distance tiles computed once.
+    ``precision="bf16"`` rounds the operands to bf16 first (distances and the
+    weighted accumulation stay f32)."""
+    a, b = _cast_chunks(precision, a, b)
     d2, d1 = _dist_tiles(a, b, kernels)
     out = jnp.zeros((a.shape[0], b.shape[0]), jnp.float32)
     for i, kn in enumerate(kernels):

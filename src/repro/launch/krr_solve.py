@@ -35,6 +35,9 @@ def main() -> None:
     ap.add_argument("--kernel", default="rbf")
     ap.add_argument("--sigma", type=float, default=1.0)
     ap.add_argument("--lam", type=float, default=1e-6)
+    ap.add_argument("--precision", default="f32", choices=["f32", "bf16"],
+                    help="kernel tile-compute policy: bf16 tiles with f32 "
+                         "accumulation, or full f32")
     ap.add_argument("--method", default="askotch")
     ap.add_argument("--iters", type=int, default=300)
     ap.add_argument("--seed", type=int, default=0)
@@ -67,7 +70,8 @@ def main() -> None:
         x_tr, y_tr, x_te, y_te = gen(args.seed, args.n, args.d, args.n_test)
 
     prob = KRRProblem(x=x_tr, y=y_tr, kernel=args.kernel, sigma=args.sigma,
-                      lam_unscaled=args.lam, backend="xla")
+                      lam_unscaled=args.lam, backend="xla",
+                      precision=args.precision)
 
     if args.method == "direct":
         kw = {}

@@ -83,6 +83,9 @@ def main() -> None:
                     help="Nystrom preconditioner rank")
     ap.add_argument("--iters", type=int, default=200)
     ap.add_argument("--tol", type=float, default=1e-5)
+    ap.add_argument("--precision", default="f32", choices=["f32", "bf16"],
+                    help="kernel tile-compute policy for the sweep AND the "
+                         "refit: bf16 tiles with f32 accumulation, or f32")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh", default=None,
                     help="ROWSxMODEL device mesh (e.g. 4x1) or 'auto'; runs "
@@ -112,7 +115,8 @@ def main() -> None:
                else synthetic.krr_regression)
         x_tr, y_tr, x_te, y_te = gen(args.seed, args.n, args.d, args.n_test)
 
-    prob = KRRProblem(x=x_tr, y=y_tr, kernel=args.kernel, backend="xla")
+    prob = KRRProblem(x=x_tr, y=y_tr, kernel=args.kernel, backend="xla",
+                      precision=args.precision)
     mesh = None
     if args.mesh is not None:
         from repro.distributed.meshes import make_solver_mesh

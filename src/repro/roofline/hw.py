@@ -1,6 +1,7 @@
 """Target hardware constants (TPU v5e-class, per assignment)."""
 
 PEAK_FLOPS_BF16 = 197e12  # per chip
+PEAK_FLOPS_F32 = PEAK_FLOPS_BF16 / 2  # MXU f32 passthrough runs at half rate
 HBM_BW = 819e9  # bytes/s per chip
 ICI_BW = 50e9  # bytes/s per link
 HBM_BYTES = 16 * 2**30  # 16 GiB per chip

@@ -74,6 +74,7 @@ def make_sharded_krr_predict_fn(
     sigma: float | tuple[float, ...] = 1.0,
     weights=None,
     backend: str = "auto",
+    precision: str = "f32",
     max_batch: int = 4096,
 ):
     """Serve all t heads from row-sharded training points on ``mesh``.
@@ -83,13 +84,15 @@ def make_sharded_krr_predict_fn(
     per bucket the only wire traffic is the (bucket, t) psum of partial
     scores.  On a 1-device mesh this is exactly the single-device server.
     A kernel TUPLE (+ ``weights``) serves the weighted-sum multi-kernel
-    predictor — still one fused pass per bucket.
+    predictor — still one fused pass per bucket.  ``precision="bf16"`` scores
+    with bf16 kernel tiles + f32 accumulation (the solve-side policy applies
+    to serving too).
     """
     from repro.distributed.sharded_operator import ShardedKernelOperator
 
     op = ShardedKernelOperator.bind(
         mesh, x_train, kernel=kernel, sigma=sigma, backend=backend,
-        weights=weights,
+        weights=weights, precision=precision,
     )
     w_sh = jax.device_put(jnp.asarray(w), op.sharding(jnp.ndim(w)))
     return make_krr_predict_fn(op, w_sh, max_batch=max_batch)
@@ -108,7 +111,9 @@ def make_krr_predict_fn_from_config(
     Args:
       config: the JSON-able dict ``TuneResult.best`` carries (or a CLI
         ``--export`` file re-read): requires ``kernel`` and ``sigma``;
-        ``backend`` is honored when present.  A multi-kernel export carries
+        ``backend`` and ``precision`` (the "f32" | "bf16" tile policy the
+        model was tuned under) are honored when present.  A multi-kernel
+        export carries
         ``kernel`` as a LIST of names plus ``weights`` (and possibly a
         per-kernel ``sigma`` list) — the weighted-sum predictor is
         reconstructed exactly.  Extra keys (``lam_unscaled``, ``cv_mse``,
@@ -136,16 +141,18 @@ def make_krr_predict_fn_from_config(
     else:
         sigma = float(sigma)
     backend = config.get("backend", "auto")
+    precision = config.get("precision", "f32")
     if mesh is not None:
         return make_sharded_krr_predict_fn(
             mesh, jnp.asarray(x_train), jnp.asarray(w), kernel=kernel,
-            sigma=sigma, weights=weights, backend=backend, max_batch=max_batch,
+            sigma=sigma, weights=weights, backend=backend,
+            precision=precision, max_batch=max_batch,
         )
     from repro.core.multikernel import make_operator
 
     op = make_operator(
         jnp.asarray(x_train), kernel=kernel, sigma=sigma, weights=weights,
-        backend=backend,
+        backend=backend, precision=precision,
     )
     return make_krr_predict_fn(op, jnp.asarray(w), max_batch=max_batch)
 

@@ -25,6 +25,8 @@ PUBLIC_MODULES = (
     "repro.core.blocked_cg",
     "repro.kernels.ops",
     "repro.kernels.multi",
+    "repro.kernels.precision",
+    "repro.core.rff",
     "repro.distributed.sharded_operator",
     "repro.serving.krr_serve",
 )
@@ -46,6 +48,8 @@ PUBLIC_CALLABLES = {
                                 "make_sharded_krr_predict_fn",
                                 "make_krr_predict_fn_from_config"),
     "repro.core.blocked_cg": ("blocked_cg",),
+    "repro.kernels.precision": ("check_precision",),
+    "repro.core.rff": ("rff_features", "rff_factors"),
 }
 
 #: classes whose public methods must each be documented

@@ -90,6 +90,108 @@ def test_bf16_inputs_accumulate_f32(rng):
     np.testing.assert_allclose(got, want, rtol=0.07, atol=0.05)
 
 
+# ---------------------------------------------------------------------------
+# Precision policy: every ops.py entry point must return f32 under
+# precision="bf16" and stay within bf16-tile error of its f32 result, on both
+# CPU backends, for 1-D and (n, t) RHS.  precision="f32" is the exact
+# pre-policy behavior (bit-identity is asserted in tests/test_precision.py).
+# ---------------------------------------------------------------------------
+
+_BF16_KW = dict(rtol=0.05, atol=0.02)
+
+
+@pytest.mark.parametrize("kern", KERNEL_NAMES)
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+@pytest.mark.parametrize("vshape", ["1d", "2d"])
+def test_precision_bf16_matvec(rng, kern, backend, vshape):
+    a = rng.standard_normal((33, 7)).astype(np.float32)
+    b = rng.standard_normal((67, 7)).astype(np.float32)
+    v = rng.standard_normal((67,) if vshape == "1d" else (67, 3)).astype(np.float32)
+    f32 = np.asarray(
+        ops.kernel_matvec(a, b, v, kernel=kern, sigma=1.2, backend=backend,
+                          chunk_a=16, chunk_b=32)
+    )
+    got = np.asarray(
+        ops.kernel_matvec(a, b, v, kernel=kern, sigma=1.2, backend=backend,
+                          chunk_a=16, chunk_b=32, precision="bf16")
+    )
+    assert got.dtype == np.float32 and got.shape == f32.shape
+    np.testing.assert_allclose(got, f32, **_BF16_KW)
+
+
+@pytest.mark.parametrize("kern", KERNEL_NAMES)
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+def test_precision_bf16_block(rng, kern, backend):
+    a = rng.standard_normal((21, 5)).astype(np.float32)
+    b = rng.standard_normal((43, 5)).astype(np.float32)
+    f32 = np.asarray(ops.kernel_block(a, b, kernel=kern, sigma=0.8, backend=backend))
+    got = np.asarray(
+        ops.kernel_block(a, b, kernel=kern, sigma=0.8, backend=backend,
+                         precision="bf16")
+    )
+    assert got.dtype == np.float32
+    np.testing.assert_allclose(got, f32, **_BF16_KW)
+
+
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+@pytest.mark.parametrize("vshape", ["1d", "2d"])
+def test_precision_bf16_multi_entry_points(rng, backend, vshape):
+    kernels = ("rbf", "laplacian")
+    sigmas = (1.0, 1.6)
+    a = rng.standard_normal((19, 6)).astype(np.float32)
+    b = rng.standard_normal((41, 6)).astype(np.float32)
+    t = 1 if vshape == "1d" else 2
+    v = rng.standard_normal((41,) if vshape == "1d" else (41, t)).astype(np.float32)
+    w = rng.uniform(0.2, 1.0, size=(2,)).astype(np.float32)
+
+    for fn, kw in (
+        (ops.kernel_matvec_multi, dict(weights=w)),
+        (ops.kernel_matvec_components, {}),
+    ):
+        f32 = np.asarray(
+            fn(a, b, v, kernels=kernels, sigmas=sigmas, backend=backend,
+               chunk_a=8, chunk_b=16, **kw)
+        )
+        got = np.asarray(
+            fn(a, b, v, kernels=kernels, sigmas=sigmas, backend=backend,
+               chunk_a=8, chunk_b=16, precision="bf16", **kw)
+        )
+        assert got.dtype == np.float32 and got.shape == f32.shape
+        np.testing.assert_allclose(got, f32, **_BF16_KW)
+
+    f32 = np.asarray(
+        ops.kernel_block_multi(a, b, kernels=kernels, sigmas=sigmas,
+                               weights=(0.5, 0.5), backend=backend)
+    )
+    got = np.asarray(
+        ops.kernel_block_multi(a, b, kernels=kernels, sigmas=sigmas,
+                               weights=(0.5, 0.5), backend=backend,
+                               precision="bf16")
+    )
+    assert got.dtype == np.float32
+    np.testing.assert_allclose(got, f32, **_BF16_KW)
+
+
+def test_precision_rejects_unknown(rng):
+    a = rng.standard_normal((4, 3)).astype(np.float32)
+    v = rng.standard_normal((4,)).astype(np.float32)
+    with pytest.raises(ValueError, match="unknown precision"):
+        ops.kernel_matvec(a, a, v, backend="xla", precision="f16")
+
+
+def test_sigma_dtype_canonicalized(rng):
+    """numpy/jnp scalars, ints and 0-d arrays all dispatch identically."""
+    a = rng.standard_normal((9, 4)).astype(np.float32)
+    b = rng.standard_normal((17, 4)).astype(np.float32)
+    v = rng.standard_normal((17,)).astype(np.float32)
+    want = np.asarray(ops.kernel_matvec(a, b, v, sigma=2.0, backend="xla"))
+    for sigma in (2, np.float64(2.0), np.float32(2.0), jnp.asarray(2.0),
+                  jnp.bfloat16(2.0)):
+        got = np.asarray(ops.kernel_matvec(a, b, v, sigma=sigma, backend="xla"))
+        assert got.dtype == np.float32
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
 def _check_matvec_oracle(m, n, d, kern, seed):
     r = np.random.default_rng(seed)
     a = r.standard_normal((m, d)).astype(np.float32)

@@ -1,0 +1,204 @@
+"""The mixed-precision policy end to end: bf16 kernel tiles with f32
+accumulation must converge like f32 (within the bf16 noise floor), the f32
+path must stay bit-identical to the pre-policy behavior, and the RFF
+preconditioner must be a usable stand-in for Nystrom on rbf problems.
+
+The parity tolerances encode the measured physics of the policy: bf16 tile
+noise is amplified by the problem's conditioning (roughly ||K||/lam), so each
+check runs at a tolerance ABOVE that floor — PCG's recursive residual rides
+through the noise (~1.1x iterations at tol=1e-5 on the testbed) while
+ASkotch's block-coordinate updates track f32 step for step down to the floor
+and stall below it (solver_api warns via BF16_TOL_FLOOR for targets bf16
+cannot express at all)."""
+
+import dataclasses
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.krr import KRRProblem
+from repro.core.solver_api import BF16_TOL_FLOOR, solve, tune
+from repro.kernels import ops
+
+
+def _problem(n=300, d=5, seed=0, **kw):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal((n, d)).astype(np.float32))
+    y = jnp.asarray(r.standard_normal((n,)).astype(np.float32))
+    kw.setdefault("backend", "xla")
+    return KRRProblem(x=x, y=y, sigma=1.0, **kw)
+
+
+# ---------------------------------------------------------------------------
+# solver parity: bf16 reaches the same tolerance within <= 1.25x iterations
+# ---------------------------------------------------------------------------
+
+
+def test_pcg_bf16_parity():
+    p32 = _problem(lam_unscaled=1e-4, precision="f32")
+    p16 = dataclasses.replace(p32, precision="bf16")
+    o32 = solve(p32, "pcg-nystrom", max_iters=300, tol=1e-5, rank=100)
+    o16 = solve(p16, "pcg-nystrom", max_iters=300, tol=1e-5, rank=100)
+    assert o32.info["converged"] and o16.info["converged"]
+    assert o16.info["iters"] <= 1.25 * o32.info["iters"]
+    assert o16.w.dtype == jnp.float32  # solution stays f32 by construction
+
+
+def test_askotch_bf16_parity():
+    # tol sits above the bf16 noise floor for this conditioning (lam=1e-2);
+    # there ASkotch-bf16 tracks f32 step for step.
+    p32 = _problem(lam_unscaled=1e-2, precision="f32")
+    p16 = dataclasses.replace(p32, precision="bf16")
+    o32 = solve(p32, "askotch", max_iters=1000, tol=5e-3, rank=50)
+    o16 = solve(p16, "askotch", max_iters=1000, tol=5e-3, rank=50)
+    assert o32.info["converged"] and o16.info["converged"]
+    assert o16.info["iters"] <= 1.25 * o32.info["iters"]
+
+
+def test_solve_precision_override_and_validation():
+    p = _problem(lam_unscaled=1e-3)
+    out = solve(p, "pcg-nystrom", max_iters=200, tol=1e-4, rank=64,
+                precision="bf16")
+    assert out.info["converged"]
+    with pytest.raises(ValueError, match="unknown precision"):
+        solve(p, "pcg-nystrom", precision="f16")
+
+
+def test_bf16_machine_precision_target_warns():
+    p = _problem(lam_unscaled=1e-3, precision="bf16")
+    with pytest.warns(UserWarning, match="bf16"):
+        solve(p, "pcg-nystrom", max_iters=5, tol=BF16_TOL_FLOOR / 10, rank=32)
+    # f32 solves at the same tol stay silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        solve(dataclasses.replace(p, precision="f32"), "pcg-nystrom",
+              max_iters=5, tol=BF16_TOL_FLOOR / 10, rank=32)
+
+
+# ---------------------------------------------------------------------------
+# f32 is bit-identical: the policy only exists when asked for
+# ---------------------------------------------------------------------------
+
+
+def test_f32_path_bit_identical():
+    r = np.random.default_rng(1)
+    a = r.standard_normal((37, 6)).astype(np.float32)
+    b = r.standard_normal((71, 6)).astype(np.float32)
+    v = r.standard_normal((71, 2)).astype(np.float32)
+    for backend in ("xla", "interpret"):
+        base = np.asarray(
+            ops.kernel_matvec(a, b, v, sigma=1.3, backend=backend)
+        )
+        explicit = np.asarray(
+            ops.kernel_matvec(a, b, v, sigma=1.3, backend=backend,
+                              precision="f32")
+        )
+        np.testing.assert_array_equal(base, explicit)
+
+
+# ---------------------------------------------------------------------------
+# tune(): precision threads through the sweep and into the best-config export
+# ---------------------------------------------------------------------------
+
+
+def test_tune_bf16_agrees_with_f32_and_exports_precision():
+    kw = dict(sigmas=(0.5, 2.0), lams=(1e-3, 1e-1), folds=3, rank=32,
+              max_iters=200, tol=1e-4, seed=0)
+    p = _problem(n=200)
+    r32 = tune(p, **kw)
+    r16 = tune(p, precision="bf16", **kw)
+    assert r16.best["precision"] == "bf16"
+    assert r32.best["precision"] == "f32"
+    assert r16.best["sigma"] == r32.best["sigma"]
+    assert r16.best["lam_unscaled"] == r32.best["lam_unscaled"]
+    for a, b in zip(r16.records, r32.records):
+        np.testing.assert_allclose(a["cv_mse"], b["cv_mse"], rtol=0.05)
+
+
+def test_mesh_1device_bf16_parity():
+    from repro.distributed.meshes import make_solver_mesh
+
+    p32 = _problem(lam_unscaled=1e-4, precision="f32")
+    p16 = dataclasses.replace(p32, precision="bf16")
+    mesh = make_solver_mesh((1, 1))
+    o32 = solve(p32, "pcg-nystrom", mesh=mesh, max_iters=300, tol=1e-5,
+                rank=100)
+    o16 = solve(p16, "pcg-nystrom", mesh=mesh, max_iters=300, tol=1e-5,
+                rank=100)
+    assert o32.info["converged"] and o16.info["converged"]
+    assert o16.info["iters"] <= 1.25 * o32.info["iters"]
+
+
+# ---------------------------------------------------------------------------
+# serving honors the exported precision
+# ---------------------------------------------------------------------------
+
+
+def test_serving_reconstructs_bf16_policy():
+    from repro.serving.krr_serve import make_krr_predict_fn_from_config
+
+    p = _problem(lam_unscaled=1e-3, precision="bf16")
+    out = solve(p, "pcg-nystrom", max_iters=200, tol=1e-4, rank=64)
+    cfg = {"kernel": "rbf", "sigma": 1.0, "backend": "xla",
+           "precision": "bf16"}
+    predict = make_krr_predict_fn_from_config(cfg, p.x, out.w)
+    scores = predict(p.x[:16])
+    assert scores.shape == (16,) and scores.dtype == jnp.float32
+    # bf16 scoring agrees with f32 scoring to tile precision
+    f32_scores = make_krr_predict_fn_from_config(
+        {**cfg, "precision": "f32"}, p.x, out.w
+    )(p.x[:16])
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(f32_scores),
+                               rtol=0.05, atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# RFF preconditioner: Nystrom stand-in on rbf, hard error elsewhere
+# ---------------------------------------------------------------------------
+
+
+def test_rff_within_1p5x_of_nystrom():
+    p = _problem(lam_unscaled=1e-4)
+    on = solve(p, "pcg-nystrom", max_iters=300, tol=1e-5, rank=100)
+    orf = solve(p, "pcg-rff", max_iters=300, tol=1e-5, rank=100)
+    assert on.info["converged"] and orf.info["converged"]
+    assert orf.info["iters"] <= 1.5 * on.info["iters"]
+
+
+def test_rff_oversampling_beats_exact_rank():
+    """Truncating an oversampled feature SVD must not be worse than using an
+    exactly-rank-r feature set (whose noisy eigenvalue tail poisons the
+    Woodbury damping)."""
+    import jax
+
+    from repro.core.blocked_cg import blocked_cg
+    from repro.core.operator import as_multirhs
+    from repro.core.rff import rff_factors
+
+    p = _problem(lam_unscaled=1e-4)
+    key = jax.random.PRNGKey(0)
+    lam = jnp.float32(p.lam)
+    matvec = jax.jit(p.k_lam_matvec)
+    y, _ = as_multirhs(p.y)
+    iters = {}
+    for c in (1, 4):
+        f = rff_factors(key, p.x, 100, 1.0, oversample=c)
+        assert f.u.shape == (300, 100) and f.lam.shape == (100,)
+        rho = lam + f.lam[-1]
+        coeff = (f.lam[-1] + rho) / (f.lam + rho)
+
+        def pinv(v, f=f, coeff=coeff):
+            utv = f.u.T @ v
+            return f.u @ (utv * coeff[:, None]) + (v - f.u @ utv)
+
+        res = blocked_cg(matvec, y, jax.jit(pinv), max_iters=300, tol=1e-5)
+        iters[c] = res.iters
+    assert iters[4] <= iters[1]
+
+
+def test_rff_rejects_non_rbf():
+    p = _problem(kernel="laplacian", lam_unscaled=1e-3)
+    with pytest.raises(ValueError, match="rbf-only"):
+        solve(p, "pcg-rff", max_iters=10, rank=32)
