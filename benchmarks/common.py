@@ -1,14 +1,50 @@
 """Shared benchmark helpers.  Every bench prints ``name,us_per_call,derived``
-CSV rows (harness contract) plus human-readable context on stderr."""
+CSV rows (harness contract) plus human-readable context on stderr;
+``write_results`` additionally appends a machine-readable record to a
+``BENCH_<NAME>.json`` trajectory file so perf numbers accumulate across
+runs/commits instead of scrolling away in CI logs."""
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def write_results(bench: str, record: dict, path: str | None = None) -> str:
+    """Append ``record`` to the ``BENCH_<BENCH>.json`` trajectory file.
+
+    The file holds a JSON LIST of run records (appended read-modify-write;
+    a fresh file starts the list), each stamped with a UTC timestamp and the
+    smoke flag, so ``BENCH_SERVING.json`` etc. accumulate a machine-readable
+    perf trajectory.  ``path`` overrides the default location (the repo root
+    when run as ``python -m benchmarks.run``).  Returns the path written.
+    """
+    fname = path or f"BENCH_{bench.upper()}.json"
+    runs: list = []
+    if os.path.exists(fname):
+        try:
+            with open(fname) as fh:
+                runs = json.load(fh)
+            if not isinstance(runs, list):
+                runs = [runs]
+        except (OSError, ValueError):
+            runs = []
+    runs.append({
+        "bench": bench,
+        "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        **record,
+    })
+    with open(fname, "w") as fh:
+        json.dump(runs, fh, indent=2, default=float)
+        fh.write("\n")
+    note(f"wrote {fname} ({len(runs)} run record(s))")
+    return fname
 
 
 def note(msg: str) -> None:

@@ -9,6 +9,7 @@
 #   dist      — sharded matvec/ASkotch iteration + tune() vs device count
 #   tuning    — tile-sharing sweep vs naive loop + halving-vs-grid policies
 #   multikernel — weight-axis sharing: q-kernel random search vs naive loop
+#   serving   — engine coalescing vs naive per-request loop: p50/p99/qps
 #
 # Scaled to CPU execution (the container is the oracle runtime; TPU numbers
 # come from the dry-run roofline in EXPERIMENTS.md).  Select a subset with
@@ -28,6 +29,7 @@ def main() -> None:
         bench_kernels,
         bench_multikernel,
         bench_multirhs,
+        bench_serving,
         bench_table2_scaling,
         bench_tuning,
     )
@@ -42,6 +44,7 @@ def main() -> None:
         "dist": bench_dist_scaling.main,
         "tuning": bench_tuning.main,
         "multikernel": bench_multikernel.main,
+        "serving": bench_serving.main,
     }
     want = sys.argv[1:] or list(benches)
     failed = []

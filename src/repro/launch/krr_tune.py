@@ -30,7 +30,10 @@ fold-averaged CV solution when the method supports ``w0``) and scored on
 held-out test data; ``--export PATH`` writes the serving-ready best-config
 JSON — including the per-candidate ``trace`` (rung scores + prune points)
 so the search is auditable — consumed by ``serving.krr_serve.
-make_krr_predict_fn_from_config``.  See docs/tuning.md for the walkthrough.
+make_krr_predict_fn_from_config``; ``--export-artifact DIR`` additionally
+writes a full serving artifact (config + training rows + refit weights)
+that ``repro.launch.krr_serve``/``ServingEngine.load_model`` hot-load from
+disk.  See docs/tuning.md and docs/serving.md for the walkthroughs.
 """
 
 from __future__ import annotations
@@ -100,7 +103,13 @@ def main() -> None:
                     help="report the sweep only; skip refit + test metrics")
     ap.add_argument("--export", default=None,
                     help="write the best-config JSON here (serving input)")
+    ap.add_argument("--export-artifact", default=None,
+                    help="write a full serving artifact directory here "
+                         "(config.json + weights.npz with the refit "
+                         "solution; loadable by ServingEngine.load_model)")
     args = ap.parse_args()
+    if args.export_artifact and args.no_refit:
+        ap.error("--export-artifact needs the refit weights; drop --no-refit")
 
     if args.dataset == "taxi":
         x, y = synthetic.taxi_like(args.seed, args.n + args.n_test, args.d)
@@ -194,6 +203,14 @@ def main() -> None:
             "test_mae": float(m.mae),
             "test_acc": float(m.accuracy),
         }
+        if args.export_artifact:
+            from repro.serving.engine import save_model_artifact
+
+            # tune -> refit -> artifact: config + training rows + refit
+            # weights as files on disk, hot-loadable by the serving engine
+            save_model_artifact(args.export_artifact, result.best,
+                                np.asarray(x_tr), np.asarray(out.w))
+            report["exported_artifact"] = args.export_artifact
     report["seconds"] = round(time.perf_counter() - t0, 2)
 
     if args.export:

@@ -1,0 +1,500 @@
+"""High-throughput KRR serving engine — request coalescing over the bucketed
+batch path, a hot-loadable multi-model registry, and per-model latency stats.
+
+``serving.krr_serve`` gives one model a batched predict closure; this module
+turns that closure's cost model into a *server*.  Three layers:
+
+* **Coalescing batcher** — clients submit (q_i, d) query blocks from any
+  thread (:meth:`ServingEngine.submit` returns a future); a single worker
+  loop drains the shared queue under a ``max_wait_ms`` deadline, concatenates
+  every queued request for the same model, pads the union to the next
+  power-of-two bucket and runs ONE fused ``row_block_matvec`` for all
+  requests and all t heads, then scatters per-request row slices back to the
+  futures.  k small requests cost ~one kernel pass over the training rows
+  instead of k passes — the same batching discipline that makes the solvers
+  fast (docs/serving.md has the cost model).
+
+* **Model registry** — :meth:`ServingEngine.register` (or
+  :meth:`ServingEngine.load_model` straight from a
+  :func:`save_model_artifact` directory: the ``krr_tune --export`` JSON plus
+  a weights ``.npz``) binds the operator via
+  ``krr_serve.bind_operator_from_config`` — single-device, weighted-sum
+  multi-kernel, or row-sharded on a mesh behind the SAME front end — and
+  **pre-warms every bucket** so no client ever pays a jit compile.
+  Re-registering a name hot-swaps it: requests already submitted finish on
+  the old model (they hold a reference), new submissions see the new
+  version.  A ``max_bytes`` budget LRU-evicts idle models.
+
+* **Per-model stats** — request count, qps, p50/p99 latency, a
+  batch-occupancy histogram per bucket, and the compile-cache depth, exposed
+  as a plain dict (:meth:`ServingEngine.stats`) for ``bench_serving`` and
+  the ``krr_serve`` CLI.
+
+Results are bitwise-identical to per-request ``predict`` calls at f32: each
+output row of a fused kernel pass depends only on its own query row, so
+coalescing changes throughput, never values (enforced by
+``tests/test_serving_engine.py`` and the bench).
+"""
+
+from __future__ import annotations
+
+import collections
+import json
+import os
+import queue as queue_mod
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.krr_serve import bind_operator_from_config
+
+ARTIFACT_CONFIG = "config.json"
+ARTIFACT_WEIGHTS = "weights.npz"
+
+#: smallest jit bucket — requests are padded up to at least this many rows
+MIN_BUCKET = 8
+
+
+def bucket_sizes(max_batch: int) -> tuple[int, ...]:
+    """The power-of-two bucket ladder for ``max_batch``: 8, 16, ... capped at
+    (and always including) ``max_batch`` — the full jit-cache footprint a
+    pre-warmed model compiles, O(log max_batch) entries."""
+    sizes = []
+    b = MIN_BUCKET
+    while b < max_batch:
+        sizes.append(b)
+        b <<= 1
+    sizes.append(max_batch)
+    return tuple(sizes)
+
+
+def bucket_for(q: int, max_batch: int) -> int:
+    """Bucket (padded row count) serving a ``q``-row block: the next power of
+    two >= max(q, 8), capped at ``max_batch``."""
+    b = MIN_BUCKET
+    while b < q:
+        b <<= 1
+    return min(b, max_batch)
+
+
+def save_model_artifact(path: str, config: dict, x_train, w) -> str:
+    """Write a serving artifact directory: ``config.json`` + ``weights.npz``.
+
+    ``config`` is the ``tune()`` best-config dict (what ``krr_tune --export``
+    writes — extra keys like ``trace`` ride along untouched); ``x_train`` the
+    (n, d) training rows and ``w`` the refit weights ((n,) or (n, t)).  This
+    closes the tune -> refit -> export -> serve loop as files on disk:
+    :meth:`ServingEngine.load_model` consumes the directory.  Returns
+    ``path``.
+    """
+    os.makedirs(path, exist_ok=True)
+    with open(os.path.join(path, ARTIFACT_CONFIG), "w") as fh:
+        json.dump(config, fh, indent=2, default=float)
+    np.savez(
+        os.path.join(path, ARTIFACT_WEIGHTS),
+        x_train=np.asarray(x_train),
+        w=np.asarray(w),
+    )
+    return path
+
+
+def load_model_artifact(path: str) -> tuple[dict, np.ndarray, np.ndarray]:
+    """Read a :func:`save_model_artifact` directory -> (config, x_train, w)."""
+    with open(os.path.join(path, ARTIFACT_CONFIG)) as fh:
+        config = json.load(fh)
+    with np.load(os.path.join(path, ARTIFACT_WEIGHTS)) as npz:
+        x_train, w = npz["x_train"], npz["w"]
+    return config, x_train, w
+
+
+class _ModelEntry:
+    """One registered model: bound operator + weights + jitted bucket scorer
+    + its slice of the stats.  Requests hold a direct reference, so an entry
+    keeps serving its in-flight traffic even after being swapped or evicted
+    from the registry."""
+
+    def __init__(self, name: str, version: int, config: dict, op, w,
+                 max_batch: int):
+        self.name = name
+        self.version = version
+        self.config = config
+        self.op = op
+        self.w = w
+        self.max_batch = max_batch
+        self.d = int(op.d)
+        self.out_trailing = tuple(w.shape[1:])
+        self.dtype = w.dtype
+        self.x_dtype = jnp.asarray(op.x).dtype
+        self.nbytes = (
+            int(op.n) * self.d * self.x_dtype.itemsize
+            + int(np.prod(w.shape)) * w.dtype.itemsize
+        )
+        # one jitted scorer; the jit cache holds one executable per bucket
+        import jax
+
+        self._score = jax.jit(lambda xq: op.row_block_matvec(xq, w))
+        self.warmed: set[int] = set()
+        # stats (mutated by the worker thread only; read under the engine lock)
+        self.n_requests = 0
+        self.n_rows = 0
+        self.latencies_ms: collections.deque = collections.deque(maxlen=100_000)
+        self.occupancy: dict[int, list[int]] = {}  # bucket -> [runs, rows]
+        self.t_first: float | None = None
+        self.t_last: float | None = None
+        self.last_used = time.monotonic()
+        self.loaded_at = time.time()
+
+    def score(self, padded):
+        """Run the fused bucket pass; tracks the jit-cache (bucket) depth."""
+        self.warmed.add(padded.shape[0])
+        return self._score(padded)
+
+    def warm(self) -> tuple[int, ...]:
+        """Compile every bucket in the ladder so no client pays a jit trace:
+        one zeros pass per power-of-two size, blocked to completion."""
+        for b in bucket_sizes(self.max_batch):
+            z = jnp.zeros((b, self.d), self.x_dtype)
+            self.score(z).block_until_ready()
+        return bucket_sizes(self.max_batch)
+
+    def stats(self) -> dict[str, Any]:
+        """The per-model stats dict (see :meth:`ServingEngine.stats`)."""
+        lat = np.asarray(self.latencies_ms, dtype=np.float64)
+        span = (
+            (self.t_last - self.t_first)
+            if (self.t_first is not None and self.t_last is not None)
+            else 0.0
+        )
+        return {
+            "model": self.name,
+            "version": self.version,
+            "n_requests": self.n_requests,
+            "n_rows": self.n_rows,
+            "qps": (self.n_requests / span) if span > 0 else 0.0,
+            "p50_ms": float(np.percentile(lat, 50)) if lat.size else 0.0,
+            "p99_ms": float(np.percentile(lat, 99)) if lat.size else 0.0,
+            "mean_ms": float(lat.mean()) if lat.size else 0.0,
+            "occupancy": {
+                b: {"runs": r, "rows": rows,
+                    "fill": rows / (r * b) if r else 0.0}
+                for b, (r, rows) in sorted(self.occupancy.items())
+            },
+            "compile_cache_depth": len(self.warmed),
+            "bytes": self.nbytes,
+        }
+
+
+class _Request:
+    __slots__ = ("entry", "xq", "future", "t_arrival")
+
+    def __init__(self, entry: _ModelEntry, xq, t_arrival: float):
+        self.entry = entry
+        self.xq = xq
+        self.future: Future = Future()
+        self.t_arrival = t_arrival
+
+
+class ServingEngine:
+    """Multi-model KRR serving engine (see the module docstring for the
+    three layers).  Thread-safe: any number of client threads may
+    ``submit``/``predict`` concurrently; one worker thread owns the device.
+
+    Args:
+      max_batch: largest fused bucket (and the coalescing drain cap).
+      max_wait_ms: how long the worker holds the FIRST queued request open
+        for co-travellers before closing the batch.  0 disables coalescing
+        in all but bursts already queued (the "naive-ish" limit); a few ms
+        buys large fusion under concurrent traffic for a bounded latency tax.
+      max_bytes: optional registry memory budget over (x_train + w) bytes;
+        registering past it LRU-evicts idle models.  A single model larger
+        than the budget is rejected outright.
+    """
+
+    def __init__(self, *, max_batch: int = 4096, max_wait_ms: float = 5.0,
+                 max_bytes: int | None = None):
+        self.max_batch = int(max_batch)
+        self.max_wait_ms = float(max_wait_ms)
+        self.max_bytes = max_bytes
+        self._models: dict[str, _ModelEntry] = {}
+        self._lock = threading.Lock()
+        self._queue: queue_mod.Queue[_Request] = queue_mod.Queue()
+        self._inflight = 0
+        self._evictions = 0
+        self._stop = threading.Event()
+        self._worker = threading.Thread(
+            target=self._run, name="krr-serving-worker", daemon=True
+        )
+        self._worker.start()
+
+    # -- registry -------------------------------------------------------------
+
+    def register(self, name: str, config: dict, x_train, w, *, mesh=None,
+                 warm: bool = True) -> dict[str, Any]:
+        """Bind and (hot-)register a model under ``name``.
+
+        ``config``/``x_train``/``w`` are exactly the
+        ``make_krr_predict_fn_from_config`` inputs; ``mesh=`` serves from
+        row-sharded training rows.  ``warm=True`` compiles every bucket
+        before the model becomes visible, so the first real request runs at
+        steady-state latency.  If ``name`` exists the new version replaces it
+        atomically — in-flight requests finish on the old model.  Returns an
+        info dict (version, bytes, warmed buckets, evicted names).
+        """
+        op, w_bound = bind_operator_from_config(config, x_train, w, mesh=mesh)
+        with self._lock:
+            version = (
+                self._models[name].version + 1 if name in self._models else 1
+            )
+        entry = _ModelEntry(name, version, dict(config), op, w_bound,
+                            self.max_batch)
+        if self.max_bytes is not None and entry.nbytes > self.max_bytes:
+            raise ValueError(
+                f"model {name!r} needs {entry.nbytes} bytes, above the "
+                f"registry budget max_bytes={self.max_bytes}"
+            )
+        warmed: tuple[int, ...] = ()
+        if warm:
+            warmed = entry.warm()
+        evicted = []
+        with self._lock:
+            self._models[name] = entry
+            evicted = self._evict_to_budget_locked(keep=name)
+        return {
+            "model": name,
+            "version": version,
+            "d": entry.d,
+            "bytes": entry.nbytes,
+            "warmed_buckets": list(warmed),
+            "evicted": evicted,
+        }
+
+    def load_model(self, name: str, path: str, *, mesh=None,
+                   warm: bool = True) -> dict[str, Any]:
+        """:func:`load_model_artifact` + :meth:`register` in one call — the
+        disk-to-serving path the ``krr_serve`` CLI uses."""
+        config, x_train, w = load_model_artifact(path)
+        return self.register(name, config, x_train, w, mesh=mesh, warm=warm)
+
+    def unregister(self, name: str) -> None:
+        """Drop ``name`` from the registry (in-flight requests finish)."""
+        with self._lock:
+            self._models.pop(name, None)
+
+    def models(self) -> list[str]:
+        """Currently registered model names (sorted)."""
+        with self._lock:
+            return sorted(self._models)
+
+    def _evict_to_budget_locked(self, keep: str) -> list[str]:
+        evicted = []
+        if self.max_bytes is None:
+            return evicted
+        total = sum(e.nbytes for e in self._models.values())
+        while total > self.max_bytes and len(self._models) > 1:
+            victim = min(
+                (n for n in self._models if n != keep),
+                key=lambda n: self._models[n].last_used,
+                default=None,
+            )
+            if victim is None:
+                break
+            total -= self._models[victim].nbytes
+            del self._models[victim]
+            evicted.append(victim)
+            self._evictions += 1
+        return evicted
+
+    # -- the client surface ---------------------------------------------------
+
+    def submit(self, name: str, xq) -> Future:
+        """Enqueue a (q, d) query block for ``name``; returns a
+        ``concurrent.futures.Future`` resolving to the (q,) or (q, t) host
+        scores (numpy).  The worker stamps ``future.latency_ms`` (submit to
+        scatter, device-synced) before resolving it.  Safe from any thread;
+        shape/model errors raise immediately."""
+        if self._stop.is_set():
+            raise RuntimeError("ServingEngine is shut down")
+        with self._lock:
+            entry = self._models.get(name)
+            if entry is None:
+                raise KeyError(
+                    f"unknown model {name!r}; registered: {sorted(self._models)}"
+                )
+            entry.last_used = time.monotonic()
+            self._inflight += 1
+        # requests stay HOST-side numpy until the bucket pass: assembly and
+        # scatter never touch the device, so the only compiled shapes are the
+        # O(log max_batch) warmed buckets — never a per-traffic-mix
+        # concatenate/pad/slice executable
+        xq = np.asarray(xq)
+        if xq.ndim != 2 or xq.shape[1] != entry.d:
+            with self._lock:
+                self._inflight -= 1
+            raise ValueError(
+                f"expected a (q, {entry.d}) query block for model {name!r}, "
+                f"got shape {tuple(xq.shape)}"
+            )
+        req = _Request(entry, xq, time.monotonic())
+        if xq.shape[0] == 0:  # empty request: resolve without queueing
+            req.future.latency_ms = 0.0
+            req.future.set_result(
+                np.zeros((0,) + entry.out_trailing, entry.dtype)
+            )
+            with self._lock:
+                self._inflight -= 1
+            return req.future
+        self._queue.put(req)
+        return req.future
+
+    def predict(self, name: str, xq):
+        """Blocking convenience wrapper: ``submit(name, xq).result()``."""
+        return self.submit(name, xq).result()
+
+    def drain(self, timeout: float = 30.0) -> None:
+        """Block until every submitted request has been served (tests and
+        clean CLI shutdown; raises TimeoutError after ``timeout`` s)."""
+        t0 = time.monotonic()
+        while True:
+            with self._lock:
+                if self._inflight == 0:
+                    return
+            if time.monotonic() - t0 > timeout:
+                raise TimeoutError("serving queue did not drain in time")
+            time.sleep(0.001)
+
+    def shutdown(self) -> None:
+        """Stop the worker loop (idempotent).  Queued requests are served
+        first; the engine cannot be restarted."""
+        self._stop.set()
+        self._worker.join(timeout=10.0)
+
+    def __enter__(self) -> "ServingEngine":
+        """Context-manager support: ``with ServingEngine() as eng: ...``."""
+        return self
+
+    def __exit__(self, *exc) -> None:
+        """Drain outstanding work, then shut the worker down."""
+        try:
+            self.drain()
+        finally:
+            self.shutdown()
+
+    # -- stats ----------------------------------------------------------------
+
+    def stats(self, name: str | None = None) -> dict[str, Any]:
+        """Per-model serving stats.
+
+        With ``name``: that model's dict — ``n_requests``, ``qps`` (completed
+        requests over the first->last completion span), ``p50_ms``/``p99_ms``
+        latency (submit to scatter, device-synced), the per-bucket occupancy
+        histogram ``{bucket: {runs, rows, fill}}``, ``compile_cache_depth``
+        (warmed + traffic-compiled bucket count) and ``bytes``.  Without:
+        ``{"models": {name: ...}, "evictions", "bytes", "max_bytes"}``.
+        """
+        with self._lock:
+            if name is not None:
+                return self._models[name].stats()
+            return {
+                "models": {n: e.stats() for n, e in self._models.items()},
+                "evictions": self._evictions,
+                "bytes": sum(e.nbytes for e in self._models.values()),
+                "max_bytes": self.max_bytes,
+            }
+
+    # -- the worker loop ------------------------------------------------------
+
+    def _run(self) -> None:
+        while True:
+            try:
+                req = self._queue.get(timeout=0.05)
+            except queue_mod.Empty:
+                if self._stop.is_set():
+                    return
+                continue
+            batch = [req]
+            rows = req.xq.shape[0]
+            # hold the batch open for co-travellers until the deadline (or
+            # until one max_batch bucket is already full).  An idle gap of
+            # max_wait/5 flushes early: under sustained load arrivals are
+            # closer than the gap and the batch fills to the deadline; under
+            # light load the lone request doesn't pay the full wait.
+            deadline = time.monotonic() + self.max_wait_ms / 1e3
+            idle_gap = self.max_wait_ms / 5e3
+            while rows < self.max_batch:
+                try:  # drain whatever is already queued without blocking
+                    nxt = self._queue.get_nowait()
+                except queue_mod.Empty:
+                    wait = min(deadline - time.monotonic(), idle_gap)
+                    if wait <= 0:
+                        break
+                    try:
+                        nxt = self._queue.get(timeout=wait)
+                    except queue_mod.Empty:
+                        break
+                batch.append(nxt)
+                rows += nxt.xq.shape[0]
+            by_entry: dict[int, list[_Request]] = {}
+            for r in batch:
+                by_entry.setdefault(id(r.entry), []).append(r)
+            for reqs in by_entry.values():
+                try:
+                    self._serve_entry(reqs[0].entry, reqs)
+                except Exception as exc:  # keep the worker alive
+                    for r in reqs:
+                        if not r.future.done():
+                            r.future.set_exception(exc)
+                            with self._lock:
+                                self._inflight -= 1
+
+    def _serve_entry(self, entry: _ModelEntry, reqs: list[_Request]) -> None:
+        lens = [r.xq.shape[0] for r in reqs]
+        flat = reqs[0].xq if len(reqs) == 1 else np.concatenate(
+            [r.xq for r in reqs], axis=0
+        )
+        total = flat.shape[0]
+        outs = []
+        start = 0
+        while start < total:
+            stop = min(start + entry.max_batch, total)
+            b = bucket_for(stop - start, entry.max_batch)
+            padded = np.zeros((b, entry.d), flat.dtype)
+            padded[: stop - start] = flat[start:stop]
+            # the ONE device round trip: a warmed bucket shape in, host
+            # scores out (np.asarray blocks on the device computation)
+            out = np.asarray(entry.score(padded))[: stop - start]
+            entry.occupancy.setdefault(b, [0, 0])
+            entry.occupancy[b][0] += 1
+            entry.occupancy[b][1] += stop - start
+            outs.append(out)
+            start = stop
+        out = outs[0] if len(outs) == 1 else np.concatenate(outs, axis=0)
+        t_done = time.monotonic()
+        ofs = 0
+        for r, ln in zip(reqs, lens):
+            lat_ms = (t_done - r.t_arrival) * 1e3
+            # stamp the measured submit->scatter latency on the future so
+            # clients (the bench, the CLI) get per-request numbers for free
+            r.future.latency_ms = lat_ms
+            r.future.set_result(out[ofs: ofs + ln])
+            ofs += ln
+            entry.latencies_ms.append(lat_ms)
+        entry.n_requests += len(reqs)
+        entry.n_rows += total
+        if entry.t_first is None:
+            entry.t_first = reqs[0].t_arrival
+        entry.t_last = t_done
+        with self._lock:
+            self._inflight -= len(reqs)
+
+
+__all__ = [
+    "ServingEngine",
+    "bucket_for",
+    "bucket_sizes",
+    "load_model_artifact",
+    "save_model_artifact",
+]

@@ -50,7 +50,7 @@ def make_krr_predict_fn(op, w: jax.Array, *, max_batch: int = 4096):
     def predict(xq: jax.Array) -> jax.Array:
         q = xq.shape[0]
         if q == 0:  # empty request: (0,) / (0, t) without tracing a bucket
-            return jnp.zeros((0,) + w.shape[1:], jnp.float32)
+            return jnp.zeros((0,) + w.shape[1:], w.dtype)
         outs = []
         start = 0
         while start < q:
@@ -98,35 +98,27 @@ def make_sharded_krr_predict_fn(
     return make_krr_predict_fn(op, w_sh, max_batch=max_batch)
 
 
-def make_krr_predict_fn_from_config(
+def bind_operator_from_config(
     config: dict,
     x_train: jax.Array,
     w: jax.Array,
     *,
     mesh=None,
-    max_batch: int = 4096,
 ):
-    """Serve a refit model from a ``tune()`` best-config export.
+    """Resolve a ``tune()`` best-config export into ``(operator, w)``.
 
-    Args:
-      config: the JSON-able dict ``TuneResult.best`` carries (or a CLI
-        ``--export`` file re-read): requires ``kernel`` and ``sigma``;
-        ``backend`` and ``precision`` (the "f32" | "bf16" tile policy the
-        model was tuned under) are honored when present.  A multi-kernel
-        export carries
-        ``kernel`` as a LIST of names plus ``weights`` (and possibly a
-        per-kernel ``sigma`` list) — the weighted-sum predictor is
-        reconstructed exactly.  Extra keys (``lam_unscaled``, ``cv_mse``,
-        ``folds``) are ignored here — regularization lives in the solve, not
-        the scorer.
-      x_train: (n, d) training rows the weights were fit on.
-      w: the refit weights, (n,) or (n, t).
-      mesh: optional Mesh — serve from row-sharded training rows via
-        :func:`make_sharded_krr_predict_fn` instead of one device.
-
-    Returns:
-      The same batched predict closure as :func:`make_krr_predict_fn`.
+    The shared reconstruction step behind :func:`make_krr_predict_fn_from_config`
+    and the serving engine's model registry (``serving.engine``): parses the
+    kernel/sigma/weights triple (single- or multi-kernel), validates the
+    ``precision`` string via :func:`repro.kernels.precision.check_precision`
+    (a hand-edited export with an unknown policy fails HERE with the accepted
+    list, not deep inside a jit trace), and binds either a single-device
+    ``KernelOperator`` (a weighted-sum one for kernel lists) or, with
+    ``mesh=``, a row-sharded ``ShardedKernelOperator`` with ``w`` placed to
+    match.  Returns the operator and the (possibly re-placed) weights.
     """
+    from repro.kernels.precision import check_precision
+
     kernel = config["kernel"]
     sigma = config["sigma"]
     weights = config.get("weights")
@@ -141,24 +133,62 @@ def make_krr_predict_fn_from_config(
     else:
         sigma = float(sigma)
     backend = config.get("backend", "auto")
-    precision = config.get("precision", "f32")
+    precision = check_precision(config.get("precision", "f32"))
     if mesh is not None:
-        return make_sharded_krr_predict_fn(
-            mesh, jnp.asarray(x_train), jnp.asarray(w), kernel=kernel,
-            sigma=sigma, weights=weights, backend=backend,
-            precision=precision, max_batch=max_batch,
+        from repro.distributed.sharded_operator import ShardedKernelOperator
+
+        op = ShardedKernelOperator.bind(
+            mesh, jnp.asarray(x_train), kernel=kernel, sigma=sigma,
+            backend=backend, weights=weights, precision=precision,
         )
+        w_sh = jax.device_put(jnp.asarray(w), op.sharding(jnp.ndim(w)))
+        return op, w_sh
     from repro.core.multikernel import make_operator
 
     op = make_operator(
         jnp.asarray(x_train), kernel=kernel, sigma=sigma, weights=weights,
         backend=backend, precision=precision,
     )
-    return make_krr_predict_fn(op, jnp.asarray(w), max_batch=max_batch)
+    return op, jnp.asarray(w)
+
+
+def make_krr_predict_fn_from_config(
+    config: dict,
+    x_train: jax.Array,
+    w: jax.Array,
+    *,
+    mesh=None,
+    max_batch: int = 4096,
+):
+    """Serve a refit model from a ``tune()`` best-config export.
+
+    Args:
+      config: the JSON-able dict ``TuneResult.best`` carries (or a CLI
+        ``--export`` file re-read): requires ``kernel`` and ``sigma``;
+        ``backend`` and ``precision`` (the "f32" | "bf16" tile policy the
+        model was tuned under) are honored when present — an unknown
+        ``precision`` string (e.g. from a hand-edited export) raises
+        ValueError with the accepted list.  A multi-kernel export carries
+        ``kernel`` as a LIST of names plus ``weights`` (and possibly a
+        per-kernel ``sigma`` list) — the weighted-sum predictor is
+        reconstructed exactly.  Extra keys (``lam_unscaled``, ``cv_mse``,
+        ``folds``) are ignored here — regularization lives in the solve, not
+        the scorer.
+      x_train: (n, d) training rows the weights were fit on.
+      w: the refit weights, (n,) or (n, t).
+      mesh: optional Mesh — serve from row-sharded training rows via
+        :func:`make_sharded_krr_predict_fn` instead of one device.
+
+    Returns:
+      The same batched predict closure as :func:`make_krr_predict_fn`.
+    """
+    op, w = bind_operator_from_config(config, x_train, w, mesh=mesh)
+    return make_krr_predict_fn(op, w, max_batch=max_batch)
 
 
 __all__ = [
     "KernelOperator",
+    "bind_operator_from_config",
     "make_krr_predict_fn",
     "make_krr_predict_fn_from_config",
     "make_sharded_krr_predict_fn",

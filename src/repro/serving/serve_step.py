@@ -6,8 +6,10 @@ config; the decode step donates the cache so the KV buffers update in place.
 ``greedy_generate`` is the simple batched driver used by the serving example
 and the smoke tests (temperature-0).
 
-The batched KRR prediction server lives in ``repro.serving.krr_serve`` (it
-has no dependency on the model stack); ``make_krr_predict_fn`` is re-exported
+KRR serving does NOT live here: the batched predict closures are in
+``repro.serving.krr_serve`` and the coalescing multi-model engine (request
+batcher + registry + stats, docs/serving.md) in ``repro.serving.engine`` —
+neither depends on the model stack.  ``make_krr_predict_fn`` is re-exported
 here for convenience.
 """
 

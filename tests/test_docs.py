@@ -29,6 +29,7 @@ PUBLIC_MODULES = (
     "repro.core.rff",
     "repro.distributed.sharded_operator",
     "repro.serving.krr_serve",
+    "repro.serving.engine",
 )
 
 PUBLIC_CALLABLES = {
@@ -46,7 +47,11 @@ PUBLIC_CALLABLES = {
                           "kernel_block_multi"),
     "repro.serving.krr_serve": ("make_krr_predict_fn",
                                 "make_sharded_krr_predict_fn",
-                                "make_krr_predict_fn_from_config"),
+                                "make_krr_predict_fn_from_config",
+                                "bind_operator_from_config"),
+    "repro.serving.engine": ("ServingEngine", "save_model_artifact",
+                             "load_model_artifact", "bucket_sizes",
+                             "bucket_for"),
     "repro.core.blocked_cg": ("blocked_cg",),
     "repro.kernels.precision": ("check_precision",),
     "repro.core.rff": ("rff_features", "rff_factors"),
@@ -57,6 +62,7 @@ PUBLIC_CLASSES = (
     ("repro.core.operator", "KernelOperator"),
     ("repro.core.multikernel", "WeightedSumKernelOperator"),
     ("repro.distributed.sharded_operator", "ShardedKernelOperator"),
+    ("repro.serving.engine", "ServingEngine"),
 )
 
 
@@ -113,7 +119,8 @@ def test_tuning_module_doctest():
     assert res.attempted > 0 and res.failed == 0
 
 
-@pytest.mark.parametrize("doc", ["docs/tuning.md", "docs/solvers.md"])
+@pytest.mark.parametrize("doc", ["docs/tuning.md", "docs/solvers.md",
+                                 "docs/serving.md"])
 def test_docs_quickstart_doctests(doc):
     res = doctest.testfile(
         str(ROOT / doc), module_relative=False,
@@ -125,7 +132,7 @@ def test_docs_quickstart_doctests(doc):
 
 def test_docs_exist_and_linked_from_readme():
     readme = (ROOT / "README.md").read_text()
-    for page in ("architecture", "tuning", "solvers"):
+    for page in ("architecture", "tuning", "solvers", "serving"):
         assert (ROOT / "docs" / f"{page}.md").exists()
         assert f"docs/{page}.md" in readme, f"README must link docs/{page}.md"
 

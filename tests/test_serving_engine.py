@@ -1,0 +1,224 @@
+"""Serving-engine correctness: coalescing is bitwise-invisible, the registry
+evicts/hot-swaps safely under load, artifacts round-trip through disk.
+
+The load-bearing property: at f32 each output row of a fused kernel pass
+depends only on its own query row, so coalescing k requests into one bucket
+pass must be BITWISE-identical to k sequential ``make_krr_predict_fn`` calls
+— single-kernel, multi-kernel, and sharded (1-device mesh) alike.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.serving.engine import (
+    ServingEngine,
+    bucket_for,
+    bucket_sizes,
+    load_model_artifact,
+    save_model_artifact,
+)
+from repro.serving.krr_serve import make_krr_predict_fn_from_config
+
+D = 5
+T = 3
+N = 60
+
+CFG_RBF = {"kernel": "rbf", "sigma": 1.2, "backend": "xla",
+           "precision": "f32"}
+CFG_MULTI = {"kernel": ["rbf", "laplacian"], "sigma": 0.9,
+             "weights": [0.6, 0.4], "backend": "xla", "precision": "f32"}
+
+
+@pytest.fixture(scope="module")
+def model():
+    r = np.random.default_rng(3)
+    x = r.standard_normal((N, D)).astype(np.float32)
+    w = r.standard_normal((N, T)).astype(np.float32)
+    return x, w
+
+
+@pytest.fixture()
+def engine():
+    eng = ServingEngine(max_batch=64, max_wait_ms=2.0)
+    yield eng
+    eng.shutdown()
+
+
+def test_bucket_ladder():
+    assert bucket_sizes(64) == (8, 16, 32, 64)
+    assert bucket_sizes(48) == (8, 16, 32, 48)  # cap always included
+    assert bucket_sizes(8) == (8,)
+    assert bucket_for(1, 64) == 8
+    assert bucket_for(9, 64) == 16
+    assert bucket_for(64, 64) == 64
+    assert bucket_for(200, 64) == 64  # capped: served in max_batch chunks
+
+
+def test_artifact_round_trip(tmp_path, model):
+    x, w = model
+    path = save_model_artifact(str(tmp_path / "m"), CFG_RBF, x, w)
+    cfg, x2, w2 = load_model_artifact(path)
+    assert cfg == CFG_RBF
+    np.testing.assert_array_equal(x2, x)
+    np.testing.assert_array_equal(w2, w)
+
+
+@pytest.mark.parametrize("cfg", [CFG_RBF, CFG_MULTI],
+                         ids=["single-kernel", "multi-kernel"])
+def test_threaded_clients_bitwise_equal_sequential(engine, model, cfg):
+    """Many threads hammering submit() coalesce into shared bucket passes,
+    yet every result is bitwise-equal to the sequential predict closure."""
+    x, w = model
+    engine.register("m", cfg, x, w)
+    predict = make_krr_predict_fn_from_config(cfg, x, w, max_batch=64)
+
+    r = np.random.default_rng(7)
+    queries = [
+        r.standard_normal((int(r.integers(1, 20)), D)).astype(np.float32)
+        for _ in range(40)
+    ]
+    expected = [np.asarray(predict(q)) for q in queries]
+
+    results: list = [None] * len(queries)
+
+    def client(lo, hi):
+        for i in range(lo, hi):
+            results[i] = engine.predict("m", queries[i])
+
+    threads = [
+        threading.Thread(target=client, args=(j * 10, (j + 1) * 10))
+        for j in range(4)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    engine.drain()
+    for got, want in zip(results, expected):
+        assert got.dtype == np.float32
+        np.testing.assert_array_equal(got, want)
+    st = engine.stats("m")
+    assert st["n_requests"] == len(queries)
+    assert st["n_rows"] == sum(q.shape[0] for q in queries)
+
+
+def test_sharded_model_same_front_end(engine, model):
+    """A mesh-bound model serves behind the same submit() surface with
+    bitwise-equal results (1-device mesh: same math, sharded plumbing)."""
+    from repro.distributed.meshes import make_solver_mesh
+
+    x, w = model
+    mesh = make_solver_mesh("1x1")
+    info = engine.register("sharded", CFG_RBF, x, w, mesh=mesh)
+    assert info["warmed_buckets"] == [8, 16, 32, 64]
+    predict = make_krr_predict_fn_from_config(CFG_RBF, x, w, max_batch=64)
+    r = np.random.default_rng(11)
+    for q in (1, 7, 33):
+        xq = r.standard_normal((q, D)).astype(np.float32)
+        np.testing.assert_array_equal(
+            engine.predict("sharded", xq), np.asarray(predict(xq))
+        )
+
+
+def test_oversized_batch_chunks(engine, model):
+    """A single request larger than max_batch is served in chunks, still
+    bitwise-equal to the closure."""
+    x, w = model
+    engine.register("m", CFG_RBF, x, w)
+    predict = make_krr_predict_fn_from_config(CFG_RBF, x, w, max_batch=64)
+    xq = np.random.default_rng(5).standard_normal((150, D)).astype(np.float32)
+    np.testing.assert_array_equal(
+        engine.predict("m", xq), np.asarray(predict(xq))
+    )
+
+
+def test_empty_request_resolves_immediately(engine, model):
+    x, w = model
+    engine.register("m", CFG_RBF, x, w)
+    fut = engine.submit("m", np.zeros((0, D), np.float32))
+    out = fut.result(timeout=1)
+    assert out.shape == (0, T)
+    assert out.dtype == np.float32  # follows w.dtype, not hard-coded
+    assert fut.latency_ms == 0.0
+
+
+def test_submit_validation(engine, model):
+    x, w = model
+    engine.register("m", CFG_RBF, x, w)
+    with pytest.raises(KeyError, match="unknown model"):
+        engine.submit("nope", np.zeros((2, D), np.float32))
+    with pytest.raises(ValueError, match=r"\(q, 5\)"):
+        engine.submit("m", np.zeros((2, D + 1), np.float32))
+    engine.drain()  # neither error may leak an inflight slot
+
+
+def test_unknown_precision_rejected(model):
+    x, w = model
+    bad = dict(CFG_RBF, precision="f16")
+    with pytest.raises(ValueError, match="precision"):
+        make_krr_predict_fn_from_config(bad, x, w)
+
+
+def test_lru_eviction_under_budget(model):
+    """Registering past max_bytes LRU-evicts the least-recently-used model;
+    the in-flight/most-recent ones survive."""
+    x, w = model
+    one = int(N * D * 4 + N * T * 4)  # f32 x_train + w
+    with ServingEngine(max_batch=32, max_wait_ms=1.0,
+                       max_bytes=2 * one + 16) as eng:
+        eng.register("a", CFG_RBF, x, w)
+        eng.register("b", CFG_RBF, x, w)
+        eng.predict("a", np.zeros((2, D), np.float32))  # 'a' now most recent
+        info = eng.register("c", CFG_RBF, x, w)
+        assert info["evicted"] == ["b"]
+        assert eng.models() == ["a", "c"]
+        assert eng.stats()["evictions"] == 1
+    with ServingEngine(max_bytes=one // 2) as tiny:
+        with pytest.raises(ValueError, match="budget"):
+            tiny.register("big", CFG_RBF, x, w)
+
+
+def test_hot_swap_under_load(model):
+    """Re-registering a name bumps the version; requests submitted before
+    the swap finish on the OLD weights, later ones see the new."""
+    x, w = model
+    w2 = (w * 2.0).astype(np.float32)
+    old = make_krr_predict_fn_from_config(CFG_RBF, x, w, max_batch=32)
+    new = make_krr_predict_fn_from_config(CFG_RBF, x, w2, max_batch=32)
+    r = np.random.default_rng(13)
+    with ServingEngine(max_batch=32, max_wait_ms=50.0) as eng:
+        info1 = eng.register("m", CFG_RBF, x, w)
+        # long max_wait holds the pre-swap request open while we swap
+        xq_old = r.standard_normal((3, D)).astype(np.float32)
+        fut_old = eng.submit("m", xq_old)
+        info2 = eng.register("m", CFG_RBF, x, w2)
+        assert (info1["version"], info2["version"]) == (1, 2)
+        xq_new = r.standard_normal((4, D)).astype(np.float32)
+        out_new = eng.predict("m", xq_new)
+        np.testing.assert_array_equal(
+            fut_old.result(timeout=10), np.asarray(old(xq_old))
+        )
+        np.testing.assert_array_equal(out_new, np.asarray(new(xq_new)))
+
+
+def test_stats_shape(engine, model):
+    x, w = model
+    engine.register("m", CFG_RBF, x, w)
+    engine.predict("m", np.ones((3, D), np.float32))
+    st = engine.stats()
+    m = st["models"]["m"]
+    assert m["compile_cache_depth"] == len(bucket_sizes(64))
+    assert m["occupancy"][8] == {"runs": 1, "rows": 3, "fill": 3 / 8}
+    assert m["p50_ms"] > 0 and m["qps"] >= 0
+    assert st["bytes"] == m["bytes"]
+
+
+def test_shutdown_rejects_new_work(model):
+    x, w = model
+    eng = ServingEngine(max_batch=16, max_wait_ms=1.0)
+    eng.register("m", CFG_RBF, x, w)
+    eng.shutdown()
+    with pytest.raises(RuntimeError, match="shut down"):
+        eng.submit("m", np.zeros((1, D), np.float32))
