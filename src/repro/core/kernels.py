@@ -1,8 +1,31 @@
-"""Kernel functions for KRR (paper §6 / Appendix C.1).
+"""Kernel functions for KRR (paper §6 / Appendix C.1) plus the zoo extension.
 
-Three kernels are used by the paper's testbed: RBF, Laplacian, Matern-5/2.
-All are shift-invariant with unit diagonal k(x, x) = 1, a fact exploited by
-the randomly-pivoted-Cholesky baseline and the Nystrom shift heuristics.
+The paper's testbed uses RBF, Laplacian and Matern-5/2 — shift-invariant with
+unit diagonal k(x, x) = 1, a fact exploited by the randomly-pivoted-Cholesky
+baseline and the Nystrom shift heuristics.  The estimator front end adds the
+dot-product family (linear / polynomial / sigmoid) and cosine similarity;
+those have data-dependent diagonals, so trace estimates go through
+:func:`kernel_diag` instead of assuming ``tr K = n``.
+
+Every kernel is parameterized by ONE bandwidth ``sigma`` so the fused tile
+pipeline's (hashable, static) sigma threading is unchanged:
+
+  ========== ============================================  sklearn equivalent
+  rbf        exp(-||x-y||^2 / (2 sigma^2))                 gamma = 1/(2 sigma^2)
+  laplacian  exp(-||x-y||_1 / sigma)                       gamma = 1/sigma
+  matern52   (1 + s5 + 5 d^2/(3 sigma^2)) exp(-s5)         length_scale = sigma
+  linear     <x, y> / sigma^2                              gamma-free (sigma=1)
+  polynomial (<x, y> / sigma^2 + 1)^3                      gamma = 1/sigma^2
+  sigmoid    tanh(<x, y> / sigma^2 + 1)                    gamma = 1/sigma^2
+  cosine     <x, y> / (||x|| ||y||)                        scale-free
+  ========== ============================================
+
+Each kernel belongs to a distance/base-tile FAMILY (:data:`KERNEL_FAMILIES`):
+"l2" (squared Euclidean), "l1" (Manhattan), "dot" (inner product), "cos"
+(normalized inner product).  The fused streaming ops compute each family's
+tile at most once per chunk pair and apply every kernel map to the shared
+tile — the dot/cos families reuse the same MXU matmul the L2 expansion uses,
+minus the norm terms.
 
 The canonical (materializing) implementations live here; the fused streaming
 implementations (never materializing K) live in ``repro.kernels`` (Pallas for
@@ -17,7 +40,27 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-KERNEL_NAMES = ("rbf", "laplacian", "matern52")
+KERNEL_NAMES = (
+    "rbf", "laplacian", "matern52", "linear", "polynomial", "sigmoid",
+    "cosine",
+)
+
+#: distance/base-tile family per kernel — the fused ops compute one shared
+#: tile per family per chunk pair ("l2" squared-L2, "l1" Manhattan, "dot"
+#: inner product, "cos" cosine similarity)
+KERNEL_FAMILIES: dict[str, str] = {
+    "rbf": "l2",
+    "laplacian": "l1",
+    "matern52": "l2",
+    "linear": "dot",
+    "polynomial": "dot",
+    "sigmoid": "dot",
+    "cosine": "cos",
+}
+
+#: kernels with k(x, x) = 1 for every x (tr K = n exactly); the rest have
+#: data-dependent diagonals handled by :func:`kernel_diag`
+UNIT_DIAG_KERNELS = ("rbf", "laplacian", "matern52", "cosine")
 
 
 def _sq_dists(x: jax.Array, y: jax.Array) -> jax.Array:
@@ -66,10 +109,58 @@ def matern52(x: jax.Array, y: jax.Array, sigma: float) -> jax.Array:
     return (1.0 + s5 + 5.0 * d2 / (3.0 * sigma**2)) * jnp.exp(-s5)
 
 
+def _dots(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Pairwise inner products <x_i, y_j>, same promote-to-at-least-f32
+    contract as :func:`_sq_dists` (bf16 operands accumulate in f32, f64
+    operands stay f64)."""
+    dt = jnp.promote_types(x.dtype, jnp.float32)
+    return x.astype(dt) @ y.astype(dt).T
+
+
+def _cos_sims(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Pairwise cosine similarities with sklearn's zero-norm convention (a
+    zero row divides by 1, so its similarities are exactly 0)."""
+    dt = jnp.promote_types(x.dtype, jnp.float32)
+    x = x.astype(dt)
+    y = y.astype(dt)
+    xn = jnp.linalg.norm(x, axis=-1, keepdims=True)
+    yn = jnp.linalg.norm(y, axis=-1, keepdims=True)
+    x = x / jnp.where(xn == 0.0, 1.0, xn)
+    y = y / jnp.where(yn == 0.0, 1.0, yn)
+    return x @ y.T
+
+
+def linear(x: jax.Array, y: jax.Array, sigma: float) -> jax.Array:
+    """k(x, x') = <x, x'> / sigma^2 (sigma = 1 matches sklearn's linear)."""
+    return _dots(x, y) / sigma**2
+
+
+def polynomial(x: jax.Array, y: jax.Array, sigma: float) -> jax.Array:
+    """Cubic polynomial kernel (<x, x'> / sigma^2 + 1)^3 — sklearn's default
+    degree-3 / coef0 = 1 polynomial with gamma = 1/sigma^2."""
+    return (_dots(x, y) / sigma**2 + 1.0) ** 3
+
+
+def sigmoid(x: jax.Array, y: jax.Array, sigma: float) -> jax.Array:
+    """tanh(<x, x'> / sigma^2 + 1) — sklearn's sigmoid with gamma = 1/sigma^2,
+    coef0 = 1.  NOTE: indefinite (not PSD) in general."""
+    return jnp.tanh(_dots(x, y) / sigma**2 + 1.0)
+
+
+def cosine(x: jax.Array, y: jax.Array, sigma: float) -> jax.Array:
+    """Cosine similarity <x, x'> / (||x|| ||x'||); scale-free (sigma ignored)."""
+    del sigma
+    return _cos_sims(x, y)
+
+
 _KERNELS: dict[str, Callable[[jax.Array, jax.Array, float], jax.Array]] = {
     "rbf": rbf,
     "laplacian": laplacian,
     "matern52": matern52,
+    "linear": linear,
+    "polynomial": polynomial,
+    "sigmoid": sigmoid,
+    "cosine": cosine,
 }
 
 
@@ -78,6 +169,36 @@ def kernel_fn(name: str) -> Callable[[jax.Array, jax.Array, float], jax.Array]:
         return _KERNELS[name]
     except KeyError:
         raise ValueError(f"unknown kernel {name!r}; available: {KERNEL_NAMES}") from None
+
+
+def kernel_family(name: str) -> str:
+    """Base-tile family of a kernel ("l2" | "l1" | "dot" | "cos") — what the
+    fused ops share between kernel maps (see :data:`KERNEL_FAMILIES`)."""
+    try:
+        return KERNEL_FAMILIES[name]
+    except KeyError:
+        raise ValueError(f"unknown kernel {name!r}; available: {KERNEL_NAMES}") from None
+
+
+def kernel_diag(name: str, x: jax.Array, sigma: float) -> jax.Array:
+    """The (n,) diagonal k(x_i, x_i) without forming K.
+
+    Unit for the shift-invariant kernels and cosine; ||x||^2-dependent for the
+    dot-product family.  This is what keeps ``KernelOperator.trace_est`` exact
+    across the whole zoo (the Nystrom rho heuristics depend on it).
+    """
+    n = x.shape[0]
+    if name in UNIT_DIAG_KERNELS:
+        return jnp.ones((n,), jnp.float32)
+    dt = jnp.promote_types(x.dtype, jnp.float32)
+    sq = jnp.sum(x.astype(dt) * x.astype(dt), axis=-1)
+    if name == "linear":
+        return (sq / float(sigma) ** 2).astype(jnp.float32)
+    if name == "polynomial":
+        return ((sq / float(sigma) ** 2 + 1.0) ** 3).astype(jnp.float32)
+    if name == "sigmoid":
+        return jnp.tanh(sq / float(sigma) ** 2 + 1.0).astype(jnp.float32)
+    raise ValueError(f"unknown kernel {name!r}; available: {KERNEL_NAMES}")
 
 
 def kernel_matrix(name: str, x: jax.Array, y: jax.Array, sigma: float) -> jax.Array:

@@ -15,7 +15,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.operator import KernelOperator, as_multirhs
+from repro.core.operator import KernelOperator, as_multirhs, widen_gram
 
 
 def scaled_lam(n: int, lam_unscaled: float) -> float:
@@ -65,6 +65,11 @@ class KRRProblem:
             object.__setattr__(
                 self, "weights", tuple(float(w) for w in self.weights)
             )
+        if self.kernel == "precomputed":
+            # ``x`` is the train Gram: widen ONCE here (validating shape) so
+            # every ``.op`` access and dataclasses.replace() re-entry is a
+            # cheap pass-through (widen_gram is idempotent)
+            object.__setattr__(self, "x", widen_gram(self.x))
 
     @property
     def n(self) -> int:

@@ -39,8 +39,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.kernels import KERNEL_NAMES
-from repro.core.operator import KernelOperator
+from repro.core.kernels import KERNEL_NAMES, kernel_diag
+from repro.core.operator import KernelOperator, PrecomputedKernelOperator, widen_gram
 from repro.kernels import ops
 
 
@@ -206,8 +206,14 @@ class WeightedSumKernelOperator:
         return self.block(xb, xb)
 
     def trace_est(self) -> jax.Array:
-        """tr K_w = (sum_i w_i) * n — every base kernel is unit-diagonal."""
-        return jnp.float32(sum(self.weights) * self.n)
+        """tr K_w = sum_i w_i tr K_i, each exact via ``kernel_diag`` (= w_i n
+        for the unit-diagonal kernels)."""
+        return jnp.sum(
+            jnp.stack([
+                w * jnp.sum(kernel_diag(k, self.x, s))
+                for k, s, w in zip(self.kernels, self.sigmas, self.weights)
+            ])
+        )
 
     # -- composites shared by several solvers --------------------------------
 
@@ -273,11 +279,24 @@ def make_operator(
     """Build the right operator for a kernel spec — the ONE dispatch point.
 
     A string ``kernel`` yields a plain :class:`KernelOperator`; a tuple/list
-    yields a :class:`WeightedSumKernelOperator`.  ``KRRProblem.op`` and
+    yields a :class:`WeightedSumKernelOperator`; ``kernel="precomputed"``
+    treats ``x`` as a user-supplied Gram matrix (raw square or already
+    widened) and yields a :class:`PrecomputedKernelOperator` (``sigma`` is
+    ignored — the Gram already encodes it).  ``KRRProblem.op`` and
     ``ShardedKernelOperator.local_op`` both route through here, which is what
     makes multi-kernel solves work across the whole solver stack and on a
     mesh without any solver changes.
     """
+    if kernel == "precomputed":
+        if weights is not None:
+            raise ValueError(
+                "weights= does not apply to kernel='precomputed'; pre-combine "
+                "the Gram matrices instead"
+            )
+        return PrecomputedKernelOperator(
+            x=widen_gram(x), backend=backend, chunk_a=chunk_a,
+            chunk_b=chunk_b, precision=precision,
+        )
     if isinstance(kernel, (tuple, list)):
         return WeightedSumKernelOperator(
             x=x, kernels=tuple(kernel), sigma=sigma, weights=weights,

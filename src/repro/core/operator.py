@@ -11,8 +11,13 @@ primitives the whole stack is built from:
                                ``a`` (ASkotch's O(n b d) hot spot, Falkon's
                                K_nm products, prediction).
   * ``block(a, b)``          — materialize a K(a, b) tile (small blocks only).
-  * ``trace_est()``          — tr K(x, x); exact (= n) for the unit-diagonal
-                               shift-invariant kernels in the testbed.
+  * ``trace_est()``          — tr K(x, x); exact across the zoo via
+                               ``core.kernels.kernel_diag`` (= n for the
+                               unit-diagonal shift-invariant kernels).
+
+:class:`PrecomputedKernelOperator` implements the same contract over a
+user-supplied Gram matrix (``kernel="precomputed"``) — no kernel evaluations
+at all, which also makes it the cheapest oracle when testing new kernels.
 
 Everything is multi-RHS by construction: ``v`` may be ``(n,)`` or ``(n, t)``
 and a single fused kernel-tile pass serves all ``t`` columns — this is what
@@ -30,6 +35,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core.kernels import kernel_diag
 from repro.kernels import ops
 
 
@@ -99,9 +105,10 @@ class KernelOperator:
         return self.block(xb, xb)
 
     def trace_est(self) -> jax.Array:
-        """tr K.  The testbed kernels (rbf/laplacian/matern52) all have
-        k(x, x) = 1, so the trace is exactly n."""
-        return jnp.float32(self.n)
+        """tr K, exact: sum of ``kernel_diag``.  The shift-invariant kernels
+        and cosine have k(x, x) = 1 (trace exactly n); the dot-product family
+        has a ||x||^2-dependent diagonal."""
+        return jnp.sum(kernel_diag(self.kernel, self.x, self.sigma))
 
     # -- composites shared by several solvers --------------------------------
 
@@ -113,6 +120,157 @@ class KernelOperator:
         """K @ omega for a (n, r) test matrix — Nystrom sketches over the
         full kernel without materializing it."""
         return self.matvec(omega)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecomputedKernelOperator:
+    """The ``KernelOperator`` contract over a user-supplied Gram matrix.
+
+    ``kernel="precomputed"`` — no kernel evaluations anywhere: every
+    primitive is a gather/matmul over stored Gram entries, so a solve through
+    this operator is bit-identical to the same solve through an in-memory
+    kernel operator fed the identical Gram (the cheapest oracle for new
+    kernels, and sklearn's ``kernel="precomputed"`` escape hatch).
+
+    Representation — "widened rows": ``x`` is ``(n, n0 + 1)`` where row i is
+    ``[K(point_i, original train set) | original index of point_i]``.  The
+    trailing index column is what lets ``restrict``/``with_points`` (inducing
+    centers, sampled blocks, CV folds) stay plain row slicing while
+    ``block(a, b)`` recovers exact Gram entries: K(a_i, b_j) is simply
+    ``a``'s stored profile evaluated at ``b_j``'s original index.  An f32
+    index column is exact up to 2**24 rows — far beyond any Gram a user can
+    materialize.  Raw (un-widened) row blocks of width n0 — e.g. the
+    K(test, train) cross matrix at prediction time — are accepted too: their
+    profiles already cover every original index.
+    """
+
+    x: jax.Array  # (n, n0 + 1) widened rows: [Gram profile | original index]
+    backend: str = "auto"  # accepted for replace() compatibility; unused
+    chunk_a: int = 4096
+    chunk_b: int = 8192
+    precision: str = "f32"
+
+    kernel = "precomputed"
+
+    @property
+    def n(self) -> int:
+        """Number of rows this operator currently spans (after restriction)."""
+        return self.x.shape[0]
+
+    @property
+    def n0(self) -> int:
+        """Number of columns in the original Gram (the full train-set size)."""
+        return self.x.shape[1] - 1
+
+    @property
+    def d(self) -> int:
+        """Width of a RAW row block callers feed in (= n0): prediction-time
+        rows are K(test point, original train set) profiles."""
+        return self.n0
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        """(n, n) — the restricted Gram this operator applies."""
+        return (self.n, self.n)
+
+    # -- derived operators ----------------------------------------------------
+
+    def with_points(self, x_new: jax.Array) -> "PrecomputedKernelOperator":
+        """Same Gram over a different widened row set (``restrict`` output,
+        CV-fold row subsets, serving rebinds)."""
+        return dataclasses.replace(self, x=x_new)
+
+    def restrict(self, idx: jax.Array) -> "PrecomputedKernelOperator":
+        """Operator over the sub-row-set ``x[idx]`` — plain row slicing; the
+        trailing index column keeps Gram lookups exact."""
+        return self.with_points(jnp.take(self.x, idx, axis=0))
+
+    # -- the four primitives --------------------------------------------------
+
+    def _profile(self, a: jax.Array) -> jax.Array:
+        """Gram profile part of a row block: widened (b, n0+1) rows drop the
+        index column, raw (b, n0) rows pass through."""
+        if a.ndim != 2:
+            raise ValueError(
+                f"precomputed row block must be 2-D, got shape {a.shape}"
+            )
+        if a.shape[1] == self.n0 + 1:
+            return a[:, :-1]
+        if a.shape[1] == self.n0:
+            return a
+        raise ValueError(
+            f"precomputed row block has {a.shape[1]} columns; expected "
+            f"{self.n0} (raw Gram rows over the original train set) or "
+            f"{self.n0 + 1} (widened rows)"
+        )
+
+    def _cols(self) -> jax.Array:
+        """Original-train-set indices of this operator's rows."""
+        return self.x[:, -1].astype(jnp.int32)
+
+    def matvec(self, v: jax.Array) -> jax.Array:
+        """K(x, x) @ v over the stored Gram; v: (n,) or (n, t)."""
+        return self.row_block_matvec(self.x, v)
+
+    def row_block_matvec(self, a: jax.Array, v: jax.Array) -> jax.Array:
+        """K(a, x) @ v: gather ``a``'s profiles at this operator's original
+        indices, one matmul.  ``a`` may be widened or raw (see class doc)."""
+        v2, was_1d = as_multirhs(v)
+        out = jnp.take(self._profile(a), self._cols(), axis=1) @ v2
+        return maybe_squeeze(out, was_1d)
+
+    def block(self, a: jax.Array, b: jax.Array | None = None) -> jax.Array:
+        """Materialize K(a, b) from stored Gram entries (b defaults to a);
+        ``b`` must carry its index column (widened)."""
+        b = a if b is None else b
+        if b.shape[1] != self.n0 + 1:
+            raise ValueError(
+                "precomputed block() needs widened rows for the column "
+                f"operand (index column present); got width {b.shape[1]}"
+            )
+        cols = b[:, -1].astype(jnp.int32)
+        return jnp.take(self._profile(a), cols, axis=1)
+
+    def block_idx(self, idx: jax.Array) -> jax.Array:
+        """K_BB for a row-index block (Skotch/ASkotch step)."""
+        xb = jnp.take(self.x, idx, axis=0)
+        return self.block(xb, xb)
+
+    def trace_est(self) -> jax.Array:
+        """tr K(x, x), exact: gather each row's own diagonal entry."""
+        diag = jnp.take_along_axis(
+            self.x[:, :-1], self._cols()[:, None], axis=1
+        )[:, 0]
+        return jnp.sum(diag.astype(jnp.float32))
+
+    # -- composites shared by several solvers ---------------------------------
+
+    def k_lam_matvec(self, v: jax.Array, lam: jax.Array | float) -> jax.Array:
+        """(K + lam I) @ v."""
+        return self.matvec(v) + lam * v
+
+    def sketch(self, omega: jax.Array) -> jax.Array:
+        """K @ omega for a (n, r) test matrix."""
+        return self.matvec(omega)
+
+
+def widen_gram(gram: jax.Array) -> jax.Array:
+    """Attach the index column that turns a raw (n, n) Gram into
+    :class:`PrecomputedKernelOperator` rows (idempotent on widened input)."""
+    gram = jnp.asarray(gram)
+    if gram.ndim != 2:
+        raise ValueError(
+            f"precomputed kernel expects a 2-D Gram matrix, got shape {gram.shape}"
+        )
+    n, c = gram.shape
+    if c == n + 1:
+        return gram  # already widened (replace() re-entry)
+    if c != n:
+        raise ValueError(
+            f"precomputed Gram must be square, got shape {gram.shape}"
+        )
+    idx = jnp.arange(n, dtype=gram.dtype)[:, None]
+    return jnp.concatenate([gram, idx], axis=1)
 
 
 def as_multirhs(v: jax.Array) -> tuple[jax.Array, bool]:

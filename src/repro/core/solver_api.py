@@ -229,6 +229,12 @@ def tune(problem: KRRProblem, *, mesh=None, **kw):
         problem = dataclasses.replace(
             problem, precision=check_precision(kw.pop("precision"))
         )
+    if mesh is not None and problem.kernel == "precomputed":
+        raise ValueError(
+            "kernel='precomputed' cannot run over a mesh: the Gram matrix is "
+            "a single-host array with no row-sharded kernel evaluation path — "
+            "drop mesh= or pass the raw features with a kernel name"
+        )
     # lazy: keeps solve()-only imports light (imports the tune PACKAGE —
     # ``repro.core.tune`` the attribute is this very function)
     from repro.core.tune import tune as _tune
@@ -295,6 +301,13 @@ def solve(problem: KRRProblem, method: str = "askotch", *, mesh=None, **kw) -> S
             stacklevel=2,
         )
     if mesh is not None:
+        if problem.kernel == "precomputed":
+            raise ValueError(
+                "kernel='precomputed' cannot run over a mesh: the Gram "
+                "matrix is a single-host array with no row-sharded kernel "
+                "evaluation path — drop mesh= or pass the raw features with "
+                "a kernel name"
+            )
         return _solve_dist(problem, method, mesh, kw)
     _validate_options(method, kw)
     if method in ("askotch", "skotch"):

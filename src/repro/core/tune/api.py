@@ -28,6 +28,7 @@ from repro.core.tune.engine import (
     Continuation,
     SigmaGroup,
     SweepCounter,
+    canon_sigma,
     fold_avg_w0,
     make_folds,
     naive_candidate_solve,
@@ -390,7 +391,13 @@ def _common_validation(
         raise ValueError(f"unknown strategy {strategy!r}; accepted: {STRATEGIES}")
     if not sigmas or not lams:
         raise ValueError("sigmas and lams must be non-empty")
-    if any(s <= 0 for s in sigmas) or any(lv <= 0 for lv in lams):
+    # a sigma candidate may itself be a per-kernel bandwidth tuple
+    flat_sigmas = [
+        v
+        for s in sigmas
+        for v in (s if isinstance(s, (tuple, list)) else (s,))
+    ]
+    if any(s <= 0 for s in flat_sigmas) or any(lv <= 0 for lv in lams):
         raise ValueError("sigmas and lams must be positive")
     n = problem.n
     if not 2 <= folds <= n:
@@ -610,8 +617,17 @@ def tune_multikernel(
 
     rng = np.random.default_rng(seed)
     w_cands = _weight_candidates(q, n_weight_samples, weights, dirichlet_alpha, rng)
+    # a sigma candidate may be one shared bandwidth (scalar) or a per-kernel
+    # bandwidth vector of length q (canon_sigma keeps both hashable)
+    canon_sigmas = tuple(canon_sigma(s) for s in sigmas)
+    for s in canon_sigmas:
+        if isinstance(s, tuple) and len(s) != q:
+            raise ValueError(
+                f"per-kernel sigma candidate {s} has {len(s)} entries for "
+                f"{q} kernels"
+            )
     space = TuneSpace(
-        sigmas=tuple(float(s) for s in sigmas),
+        sigmas=canon_sigmas,
         lams=tuple(float(lv) for lv in lams),
         weight_samples=w_cands,
     )

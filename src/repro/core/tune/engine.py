@@ -159,18 +159,32 @@ def make_folds(n: int, folds: int, rng: np.random.Generator) -> list[np.ndarray]
     return [np.sort(f) for f in np.array_split(perm, folds)]
 
 
-def operator_for(problem: KRRProblem, sigma: float, mesh, weights=None) -> Any:
+def canon_sigma(sigma) -> float | tuple[float, ...]:
+    """Hashable canonical form of a sigma candidate: ``float`` for a scalar,
+    tuple of floats for a per-kernel bandwidth vector (dict keys, group
+    identity, and ``dataclasses.replace`` all use this spelling)."""
+    if isinstance(sigma, (tuple, list)):
+        return tuple(float(s) for s in sigma)
+    return float(sigma)
+
+
+def operator_for(problem: KRRProblem, sigma, mesh, weights=None) -> Any:
     """Operator for one sigma candidate — local or mesh-bound; ``weights``
-    re-weights a multi-kernel problem's combination (naive reference loop)."""
+    re-weights a multi-kernel problem's combination (naive reference loop).
+    ``sigma`` may be a scalar or a per-kernel tuple (multi-kernel problems);
+    a precomputed-Gram problem has no sigma axis, so its operator is
+    returned unchanged."""
     if mesh is None:
-        rep: dict[str, Any] = {"sigma": float(sigma)}
+        if problem.kernel == "precomputed":
+            return problem.op
+        rep: dict[str, Any] = {"sigma": canon_sigma(sigma)}
         if weights is not None:
             rep["weights"] = tuple(float(w) for w in weights)
         return dataclasses.replace(problem.op, **rep)
     from repro.distributed.sharded_operator import ShardedKernelOperator
 
     return ShardedKernelOperator.bind(
-        mesh, problem.x, kernel=problem.kernel, sigma=float(sigma),
+        mesh, problem.x, kernel=problem.kernel, sigma=canon_sigma(sigma),
         backend=problem.backend, weights=weights,
         precision=problem.precision,
     )

@@ -98,16 +98,20 @@ class SearchPolicy(Protocol):
 
 
 def _grid_groups(space: TuneSpace) -> list[SigmaGroup]:
-    """Full cross product, grouped by sigma in first-seen order."""
-    by_sigma: dict[float, list[float]] = {}
+    """Full cross product, grouped by sigma in first-seen order.  A sigma
+    may be a scalar or a per-kernel tuple (multi-kernel bandwidth vectors) —
+    ``canon_sigma`` makes either a hashable group key."""
+    from repro.core.tune.engine import canon_sigma
+
+    by_sigma: dict[Any, list[float]] = {}
     if space.weight_samples is None:
         # single-kernel legacy grouping: a repeated sigma repeats its lams
         for s in space.sigmas:
             for lv in space.lams:
-                by_sigma.setdefault(float(s), []).append(float(lv))
+                by_sigma.setdefault(canon_sigma(s), []).append(float(lv))
     else:
         # multi-kernel legacy grouping: sigmas dedup (dict.fromkeys)
-        for s in dict.fromkeys(float(s) for s in space.sigmas):
+        for s in dict.fromkeys(canon_sigma(s) for s in space.sigmas):
             by_sigma[s] = [float(lv) for lv in space.lams]
     return [
         SigmaGroup(sigma=s, lam_list=tuple(lams),
@@ -165,14 +169,20 @@ class RandomSearch:
             # the weight matrix was already randomly drawn — the sigma/lam
             # axes stay exhaustive, exactly like tune_multikernel always did
             return _grid_groups(space)
-        grid = [(float(s), float(lv)) for s in space.sigmas for lv in space.lams]
+        from repro.core.tune.engine import canon_sigma
+
+        grid = [
+            (canon_sigma(s), float(lv))
+            for s in space.sigmas
+            for lv in space.lams
+        ]
         k = (len(grid) if space.num_samples is None
              else min(int(space.num_samples), len(grid)))
         if k < 1:
             raise ValueError("random search needs num_samples >= 1")
         picks = rng.choice(len(grid), size=k, replace=False)
         cands = [grid[i] for i in sorted(picks)]
-        by_sigma: dict[float, list[float]] = {}
+        by_sigma: dict[Any, list[float]] = {}
         for s, lv in cands:
             by_sigma.setdefault(s, []).append(lv)
         return [

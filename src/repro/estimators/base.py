@@ -1,0 +1,141 @@
+"""sklearn interop for the estimator front end — import guard + validation.
+
+The estimators subclass ``sklearn.base.BaseEstimator``/``RegressorMixin``
+when scikit-learn is importable (so ``sklearn.clone``, ``GridSearchCV``
+nesting, and pipeline composition all work natively) and fall back to a
+small structural shim otherwise — the public surface (``get_params`` /
+``set_params`` / ``score`` with R^2) is identical either way, so nothing in
+this repo requires scikit-learn at runtime.
+
+The shared fit-time validation lives here too: estimator ``fit`` is the ONE
+boundary where user data enters the solver stack, so shape/finite checks
+raise clear ``ValueError``s here instead of surfacing as NaN solutions or
+cryptic jit shape errors deep inside a solve.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax.numpy as jnp
+import numpy as np
+
+try:  # pragma: no cover - exercised implicitly by every estimator test
+    from sklearn.base import BaseEstimator, RegressorMixin
+
+    HAVE_SKLEARN = True
+except ImportError:  # pragma: no cover
+    HAVE_SKLEARN = False
+
+    class BaseEstimator:  # type: ignore[no-redef]
+        """Structural stand-in for ``sklearn.base.BaseEstimator``: the
+        get_params/set_params contract over ``__init__`` keyword names."""
+
+        @classmethod
+        def _get_param_names(cls):
+            sig = inspect.signature(cls.__init__)
+            return sorted(
+                p.name
+                for p in sig.parameters.values()
+                if p.name != "self" and p.kind != p.VAR_KEYWORD
+            )
+
+        def get_params(self, deep: bool = True) -> dict:
+            """Constructor parameters by name (``deep`` accepted for API
+            compatibility; these estimators have no nested estimators)."""
+            return {k: getattr(self, k) for k in self._get_param_names()}
+
+        def set_params(self, **params):
+            """Set constructor parameters by name; unknown names raise."""
+            valid = set(self._get_param_names())
+            for k, v in params.items():
+                if k not in valid:
+                    raise ValueError(
+                        f"invalid parameter {k!r} for {type(self).__name__}; "
+                        f"valid: {sorted(valid)}"
+                    )
+                setattr(self, k, v)
+            return self
+
+        def __repr__(self) -> str:
+            args = ", ".join(
+                f"{k}={v!r}" for k, v in sorted(self.get_params().items())
+            )
+            return f"{type(self).__name__}({args})"
+
+    class RegressorMixin:  # type: ignore[no-redef]
+        """Structural stand-in for ``sklearn.base.RegressorMixin``."""
+
+        def score(self, X, y) -> float:
+            """R^2 of ``self.predict(X)`` vs ``y`` (uniform average over
+            output heads — sklearn's default ``multioutput``)."""
+            pred = np.asarray(self.predict(X))
+            y = np.asarray(y)
+            ss_res = np.sum((y - pred) ** 2, axis=0)
+            ss_tot = np.sum((y - np.mean(y, axis=0)) ** 2, axis=0)
+            r2 = 1.0 - ss_res / np.where(ss_tot == 0.0, 1.0, ss_tot)
+            return float(np.mean(np.where(ss_tot == 0.0, 0.0, r2)))
+
+
+class FittedPredictorMixin:
+    """Shared predict for estimators whose ``fit`` stores ``dual_coef_`` and
+    a per-method ``_predict_fn`` scorer (the ``solve()`` output's closure)."""
+
+    def predict(self, X):
+        """Predictions for ``X`` ((m, d) features, or the (m, n) cross Gram
+        for a precomputed-kernel fit); (m,) or (m, t) matching the fit
+        targets."""
+        if not hasattr(self, "dual_coef_"):
+            raise ValueError(
+                f"{type(self).__name__} is not fitted; call fit(X, y) first"
+            )
+        X = check_array(X, "X")
+        if X.shape[0] == 0:
+            # dtype follows the weights (the serving-layer contract)
+            return jnp.zeros(
+                (0,) + self.dual_coef_.shape[1:], self.dual_coef_.dtype
+            )
+        return self._predict_fn(X)
+
+
+def check_array(arr, name: str, *, ndim: tuple[int, ...] = (2,)):
+    """Convert to a jnp float array, rejecting bad shapes/values with clear
+    errors.  Preserves f64 when jax x64 is enabled (sklearn-parity runs);
+    integer/low-precision inputs are promoted to the default float."""
+    a = jnp.asarray(arr)
+    if a.ndim not in ndim:
+        raise ValueError(
+            f"{name} must be {' or '.join(f'{d}-D' for d in ndim)}; got "
+            f"shape {a.shape}"
+        )
+    if not jnp.issubdtype(a.dtype, jnp.floating):
+        a = a.astype(jnp.result_type(float))
+    if a.size and not bool(jnp.all(jnp.isfinite(a))):
+        raise ValueError(
+            f"{name} contains non-finite values (NaN or inf); clean or "
+            f"impute the data before fit/predict"
+        )
+    return a
+
+
+def check_fit_arrays(X, y, *, precomputed: bool = False):
+    """Validate an (X, y) fit pair; returns jnp arrays.
+
+    ``precomputed=True`` means X is the train Gram: it must be square (or
+    already index-widened) and row-aligned with y.
+    """
+    X = check_array(X, "X")
+    y = check_array(y, "y", ndim=(1, 2))
+    if precomputed and X.shape[1] not in (X.shape[0], X.shape[0] + 1):
+        raise ValueError(
+            "kernel='precomputed' expects a square (n, n) train Gram matrix "
+            f"for X; got shape {X.shape}"
+        )
+    if X.shape[0] != y.shape[0]:
+        raise ValueError(
+            f"X and y row counts differ: X has {X.shape[0]} rows, y has "
+            f"{y.shape[0]}"
+        )
+    if X.shape[0] < 1:
+        raise ValueError("fit needs at least one sample")
+    return X, y

@@ -1,7 +1,7 @@
 """Pallas TPU kernel: fused pairwise-kernel x matvec — ASkotch's O(n*b) hot spot.
 
 Computes ``out = K(A, B) @ V`` without materializing K, where
-``K[i, j] = k(A[i], B[j])`` for k in {rbf, laplacian, matern52}.
+``K[i, j] = k(A[i], B[j])`` for any kernel in ``core.kernels.KERNEL_NAMES``.
 
 TPU-native tiling (see docs/architecture.md, "Pallas matvec tiling"):
 
@@ -9,13 +9,17 @@ TPU-native tiling (see docs/architecture.md, "Pallas matvec tiling"):
   innermost so the (bm, kv) f32 accumulator tile stays resident in VMEM.
 
   Per grid step, VMEM holds:
-    A tile (bm, d), B tile (bn, d), V tile (bn, kv), distance tile (bm, bn),
+    A tile (bm, d), B tile (bn, d), V tile (bn, kv), base tile (bm, bn),
     accumulator (bm, kv).
-  For rbf/matern52 the distance tile comes from the MXU via the
-  ||a||^2 + ||b||^2 - 2 a.b^T expansion (one (bm,d)x(d,bn) matmul, f32
-  accumulate).  For the laplacian the L1 distance has no matmul form, so we
-  stream the feature dim in ``dchunk`` slabs and reduce |a-b| on the VPU,
-  bounding the (bm, bn, dchunk) broadcast slab to ~2 MB of VMEM.
+  The base tile depends on the kernel's FAMILY (``core.kernels.
+  KERNEL_FAMILIES``): the squared-L2 tile (rbf/matern52) comes from the MXU
+  via the ||a||^2 + ||b||^2 - 2 a.b^T expansion (one (bm,d)x(d,bn) matmul,
+  f32 accumulate); the dot-product family (linear/polynomial/sigmoid) and
+  cosine skip the norm terms and use the raw (or row-normalized) a.b^T matmul
+  directly — same MXU shape, strictly less VPU work.  The L1 distance
+  (laplacian) has no matmul form, so we stream the feature dim in ``dchunk``
+  slabs and reduce |a-b| on the VPU, bounding the (bm, bn, dchunk) broadcast
+  slab to ~2 MB of VMEM.
 
   Default bm=bn=256, d padded to a multiple of 8, kv padded to 128: the MXU
   matmuls are (256,d)x(d,256) and (256,256)x(256,kv) — both 128-aligned.
@@ -33,33 +37,57 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+from repro.core.kernels import kernel_family
+
 _SQRT5 = 5.0**0.5
 
 
-def _apply_kernel(d2_or_d1: jax.Array, kernel: str, sigma: float) -> jax.Array:
-    """Elementwise kernel on the VPU given the distance tile."""
+def _apply_kernel(base: jax.Array, kernel: str, sigma: float) -> jax.Array:
+    """Elementwise kernel map on the VPU given the kernel's base tile
+    (squared-L2 / L1 distances, inner products, or cosine similarities —
+    whichever ``core.kernels.KERNEL_FAMILIES[kernel]`` names)."""
     if kernel == "rbf":
-        return jnp.exp(-d2_or_d1 / (2.0 * sigma**2))
+        return jnp.exp(-base / (2.0 * sigma**2))
     if kernel == "laplacian":
-        return jnp.exp(-d2_or_d1 / sigma)
+        return jnp.exp(-base / sigma)
     if kernel == "matern52":
-        d2 = d2_or_d1
+        d2 = base
         d = jnp.sqrt(d2 + 1e-20)
         s5 = _SQRT5 * d / sigma
         return (1.0 + s5 + 5.0 * d2 / (3.0 * sigma**2)) * jnp.exp(-s5)
+    if kernel == "linear":
+        return base / sigma**2
+    if kernel == "polynomial":
+        return (base / sigma**2 + 1.0) ** 3
+    if kernel == "sigmoid":
+        return jnp.tanh(base / sigma**2 + 1.0)
+    if kernel == "cosine":
+        return base
     raise ValueError(f"unknown kernel {kernel!r}")
 
 
-def _distance_tile(a: jax.Array, b: jax.Array, kernel: str, dchunk: int) -> jax.Array:
-    """(bm, bn) f32 distance tile: squared-L2 (rbf/matern52) or L1 (laplacian).
+def _dot_tile(a: jax.Array, b: jax.Array) -> jax.Array:
+    """(bm, bn) f32 inner-product tile a.b^T from the MXU — operands at their
+    stored width (f32/bf16) with f32 accumulation."""
+    return jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+
+
+def _base_tile(a: jax.Array, b: jax.Array, family: str, dchunk: int) -> jax.Array:
+    """(bm, bn) f32 base tile for a kernel family: squared-L2 ("l2"), L1
+    ("l1"), inner product ("dot"), or cosine similarity ("cos").
 
     Accepts raw operand tiles in f32 OR bf16 — the mixed-precision contract:
     the MXU contraction takes the operands at their stored width with
     ``preferred_element_type=f32`` (f32 accumulation), the norms and the L1
     slab reduction upcast to f32 first (bf16 -> f32 is exact per element).
-    The returned tile is always f32.
+    The returned tile is always f32.  Zero-padded feature columns leave every
+    family's tile unchanged; zero-padded ROWS yield 0 similarities under the
+    "cos" family's zero-norm-divides-by-1 convention (sklearn's), so padding
+    never pollutes live rows in any family.
     """
-    if kernel == "laplacian":
+    if family == "l1":
         bm, d = a.shape
         bn = b.shape[0]
         nchunks = d // dchunk  # d is pre-padded to a multiple of dchunk
@@ -73,17 +101,29 @@ def _distance_tile(a: jax.Array, b: jax.Array, kernel: str, dchunk: int) -> jax.
             return acc + jnp.sum(jnp.abs(diff), axis=-1)
 
         return lax.fori_loop(0, nchunks, body, jnp.zeros((bm, bn), jnp.float32))
+    if family == "dot":
+        return _dot_tile(a, b)
+    if family == "cos":
+        af = a.astype(jnp.float32)
+        bf = b.astype(jnp.float32)
+        an = jnp.sqrt(jnp.sum(af * af, axis=-1, keepdims=True))  # (bm, 1)
+        bn_ = jnp.sqrt(jnp.sum(bf * bf, axis=-1, keepdims=True)).T  # (1, bn)
+        ab = _dot_tile(a, b)
+        return ab / (jnp.where(an == 0.0, 1.0, an) * jnp.where(bn_ == 0.0, 1.0, bn_))
+    if family != "l2":
+        raise ValueError(f"unknown kernel family {family!r}")
     af = a.astype(jnp.float32)
     bf = b.astype(jnp.float32)
     aa = jnp.sum(af * af, axis=-1, keepdims=True)  # (bm, 1)
     bb = jnp.sum(bf * bf, axis=-1, keepdims=True).T  # (1, bn)
-    ab = jax.lax.dot_general(
-        a,
-        b,
-        (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
+    ab = _dot_tile(a, b)
     return jnp.maximum(aa + bb - 2.0 * ab, 0.0)
+
+
+def _distance_tile(a: jax.Array, b: jax.Array, kernel: str, dchunk: int) -> jax.Array:
+    """Base tile for one kernel — :func:`_base_tile` keyed by the kernel's
+    family (kept as the per-kernel spelling the single-kernel bodies use)."""
+    return _base_tile(a, b, kernel_family(kernel), dchunk)
 
 
 def _cast_tiles(precision: str, *arrays: jax.Array) -> tuple[jax.Array, ...]:

@@ -2,11 +2,12 @@
 
 A weighted-sum kernel ``K_w = sum_i w_i K_i`` (q base kernels, weights w on
 the simplex) costs the same data movement as a single kernel: per (bm, bn)
-tile the pairwise distance is computed at most once per distance family
-(squared-L2 on the MXU for rbf/matern52, L1 slab-reduction on the VPU for
-laplacian) and the q elementwise kernel maps + weighted accumulation stay in
-VMEM.  This is what makes a q-kernel operator sweep cost ~1 kernel sweep
-instead of q (docs/tuning.md, "Multi-kernel sweeps").
+tile the pairwise base tile is computed at most once per kernel FAMILY
+(``core.kernels.KERNEL_FAMILIES``: squared-L2 on the MXU for rbf/matern52,
+L1 slab-reduction on the VPU for laplacian, raw / normalized a.b^T for the
+dot-product and cosine kernels) and the q elementwise kernel maps + weighted
+accumulation stay in VMEM.  This is what makes a q-kernel operator sweep
+cost ~1 kernel sweep instead of q (docs/tuning.md, "Multi-kernel sweeps").
 
 Three entry points, all validated against ``ref.kernel_*_multi`` in
 interpret mode:
@@ -32,26 +33,21 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-from repro.kernels.kernel_matvec import _apply_kernel, _cast_tiles, _distance_tile
+from repro.core.kernels import kernel_family
+from repro.kernels.kernel_matvec import _apply_kernel, _base_tile, _cast_tiles
 
 
 def _tiles(a, b, kernels, dchunk):
-    """Distance tiles shared by every kernel map: d2 (L2 family), d1 (L1)."""
-    d2 = (
-        _distance_tile(a, b, "rbf", dchunk)
-        if any(k != "laplacian" for k in kernels)
-        else None
-    )
-    d1 = (
-        _distance_tile(a, b, "laplacian", dchunk)
-        if "laplacian" in kernels
-        else None
-    )
-    return d2, d1
+    """Base tiles shared by every kernel map, one per family present
+    ("l2"/"l1"/"dot"/"cos" -> (bm, bn) f32 tile)."""
+    return {
+        fam: _base_tile(a, b, fam, dchunk)
+        for fam in dict.fromkeys(kernel_family(k) for k in kernels)
+    }
 
 
-def _tile_for(kernel, d2, d1, sigma):
-    return _apply_kernel(d1 if kernel == "laplacian" else d2, kernel, sigma)
+def _tile_for(kernel, tiles, sigma):
+    return _apply_kernel(tiles[kernel_family(kernel)], kernel, sigma)
 
 
 def _multi_matvec_body(
@@ -63,14 +59,14 @@ def _multi_matvec_body(
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    # tiles at policy width (f32/bf16); distance tiles, weight row products
+    # tiles at policy width (f32/bf16); base tiles, weight row products
     # and the accumulator stay f32, the per-kernel matmul runs at policy
     # width with f32 accumulation
     v = v_ref[...]
-    d2, d1 = _tiles(a_ref[...], b_ref[...], kernels, dchunk)
+    tiles = _tiles(a_ref[...], b_ref[...], kernels, dchunk)
     acc = jnp.zeros_like(o_ref)
     for i, (kn, sg) in enumerate(zip(kernels, sigmas)):
-        ktile = _tile_for(kn, d2, d1, sg)
+        ktile = _tile_for(kn, tiles, sg)
         # w_ic (K_i v)[:, c] == (K_i (v * w_i))[:, c]: pre-scaling v per
         # kernel lets one accumulator serve every kernel and column
         acc += lax.dot_general(
@@ -90,9 +86,9 @@ def _components_body(a_ref, b_ref, v_ref, o_ref, *, kernels, sigmas, dchunk):
         o_ref[...] = jnp.zeros_like(o_ref)
 
     v = v_ref[...]
-    d2, d1 = _tiles(a_ref[...], b_ref[...], kernels, dchunk)
+    tiles = _tiles(a_ref[...], b_ref[...], kernels, dchunk)
     for i, (kn, sg) in enumerate(zip(kernels, sigmas)):
-        ktile = _tile_for(kn, d2, d1, sg)
+        ktile = _tile_for(kn, tiles, sg)
         o_ref[i, ...] += lax.dot_general(
             ktile.astype(v.dtype), v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
@@ -100,10 +96,10 @@ def _components_body(a_ref, b_ref, v_ref, o_ref, *, kernels, sigmas, dchunk):
 
 
 def _block_multi_body(a_ref, b_ref, o_ref, *, kernels, sigmas, weights, dchunk):
-    d2, d1 = _tiles(a_ref[...], b_ref[...], kernels, dchunk)
+    tiles = _tiles(a_ref[...], b_ref[...], kernels, dchunk)
     acc = jnp.zeros_like(o_ref)
     for kn, sg, w in zip(kernels, sigmas, weights):
-        acc += w * _tile_for(kn, d2, d1, sg)
+        acc += w * _tile_for(kn, tiles, sg)
     o_ref[...] = acc
 
 

@@ -14,31 +14,38 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.kernels import _l1_dists, _sq_dists, kernel_fn
+from repro.core.kernels import (
+    _cos_sims,
+    _dots,
+    _l1_dists,
+    _sq_dists,
+    kernel_family,
+    kernel_fn,
+)
+
+#: streaming base-tile builder per kernel family (the jnp mirror of the
+#: Pallas ``_base_tile``) — each promotes to at least f32 before accumulating
+_FAMILY_TILES = {
+    "l2": _sq_dists,
+    "l1": _l1_dists,
+    "dot": _dots,
+    "cos": _cos_sims,
+}
 
 
-def tile_from_dists(
-    kernel: str, d2: jax.Array | None, d1: jax.Array | None, sigma: jax.Array
-) -> jax.Array:
-    """Elementwise kernel map given precomputed distance tiles.
+def tile_from_dists(kernel: str, tiles: dict, sigma: jax.Array) -> jax.Array:
+    """Elementwise kernel map given precomputed base tiles.
 
-    ``d2`` is the squared-L2 tile (rbf/matern52), ``d1`` the L1 tile
-    (laplacian) — the multi-kernel ops compute each at most once per tile
-    pair and apply every kernel map to the shared tile.  The map itself is
-    the Pallas kernels' ``_apply_kernel`` (one formula source; it is plain
-    jnp, so a traced sigma works here too).
+    ``tiles`` maps each kernel FAMILY present to its shared base tile
+    (squared-L2, L1, inner-product, or cosine — see ``core.kernels.
+    KERNEL_FAMILIES``); the multi-kernel ops compute each family tile at most
+    once per chunk pair and apply every kernel map to the shared tile.  The
+    map itself is the Pallas kernels' ``_apply_kernel`` (one formula source;
+    it is plain jnp, so a traced sigma works here too).
     """
     from repro.kernels.kernel_matvec import _apply_kernel
 
-    return _apply_kernel(d1 if kernel == "laplacian" else d2, kernel, sigma)
-
-
-def _needs_l2(kernels: tuple[str, ...]) -> bool:
-    return any(k != "laplacian" for k in kernels)
-
-
-def _needs_l1(kernels: tuple[str, ...]) -> bool:
-    return "laplacian" in kernels
+    return _apply_kernel(tiles[kernel_family(kernel)], kernel, sigma)
 
 
 def _cast_chunks(precision: str, *arrays: jax.Array) -> tuple[jax.Array, ...]:
@@ -156,9 +163,9 @@ def kernel_block(
 
 # ---------------------------------------------------------------------------
 # multi-kernel ops: ONE data sweep serves all q kernels (docs/tuning.md,
-# "Multi-kernel sweeps").  The pairwise distance tile is computed at most
-# once per (L2, L1) family per chunk pair; the q elementwise kernel maps and
-# the weighted accumulation ride the same streamed chunks.
+# "Multi-kernel sweeps").  The pairwise base tile is computed at most once
+# per kernel family (l2/l1/dot/cos) per chunk pair; the q elementwise kernel
+# maps and the weighted accumulation ride the same streamed chunks.
 # ---------------------------------------------------------------------------
 
 
@@ -180,9 +187,11 @@ def _multi_chunks(a, b, v, chunk_a, chunk_b):
 
 
 def _dist_tiles(a_blk, b_blk, kernels):
-    d2 = _sq_dists(a_blk, b_blk) if _needs_l2(kernels) else None
-    d1 = _l1_dists(a_blk, b_blk) if _needs_l1(kernels) else None
-    return d2, d1
+    """One shared base tile per family present (dict family -> tile)."""
+    return {
+        fam: _FAMILY_TILES[fam](a_blk, b_blk)
+        for fam in dict.fromkeys(kernel_family(k) for k in kernels)
+    }
 
 
 @functools.partial(
@@ -225,9 +234,9 @@ def kernel_matvec_multi(
     def row_block(a_blk):
         def body(acc, bv):
             b_blk, v_blk = bv
-            d2, d1 = _dist_tiles(a_blk, b_blk, kernels)
+            tiles = _dist_tiles(a_blk, b_blk, kernels)
             for i, kn in enumerate(kernels):
-                ktile = tile_from_dists(kn, d2, d1, sigmas[i])
+                ktile = tile_from_dists(kn, tiles, sigmas[i])
                 acc = acc + _acc_dot(ktile, v_blk * w_rows[i], precision)
             return acc, None
 
@@ -275,10 +284,10 @@ def kernel_matvec_components(
     def row_block(a_blk):
         def body(acc, bv):
             b_blk, v_blk = bv
-            d2, d1 = _dist_tiles(a_blk, b_blk, kernels)
+            tiles = _dist_tiles(a_blk, b_blk, kernels)
             outs = [
                 acc[i]
-                + _acc_dot(tile_from_dists(kn, d2, d1, sigmas[i]), v_blk, precision)
+                + _acc_dot(tile_from_dists(kn, tiles, sigmas[i]), v_blk, precision)
                 for i, kn in enumerate(kernels)
             ]
             return jnp.stack(outs), None
@@ -306,8 +315,8 @@ def kernel_block_multi(
     ``precision="bf16"`` rounds the operands to bf16 first (distances and the
     weighted accumulation stay f32)."""
     a, b = _cast_chunks(precision, a, b)
-    d2, d1 = _dist_tiles(a, b, kernels)
+    tiles = _dist_tiles(a, b, kernels)
     out = jnp.zeros((a.shape[0], b.shape[0]), jnp.float32)
     for i, kn in enumerate(kernels):
-        out = out + weights[i] * tile_from_dists(kn, d2, d1, sigmas[i])
+        out = out + weights[i] * tile_from_dists(kn, tiles, sigmas[i])
     return out

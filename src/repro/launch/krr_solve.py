@@ -22,6 +22,7 @@ import time
 
 import numpy as np
 
+from repro.core.kernels import KERNEL_NAMES
 from repro.core.krr import KRRProblem, evaluate, evaluate_per_head
 from repro.core.solver_api import solve as solve_any
 from repro.data import synthetic
@@ -32,7 +33,8 @@ def main() -> None:
     ap.add_argument("--n", type=int, default=20_000)
     ap.add_argument("--d", type=int, default=9)
     ap.add_argument("--n-test", type=int, default=2_000)
-    ap.add_argument("--kernel", default="rbf")
+    ap.add_argument("--kernel", default="rbf", choices=KERNEL_NAMES,
+                    help="kernel zoo name (core.kernels.KERNEL_NAMES)")
     ap.add_argument("--sigma", type=float, default=1.0)
     ap.add_argument("--lam", type=float, default=1e-6)
     ap.add_argument("--precision", default="f32", choices=["f32", "bf16"],

@@ -44,6 +44,7 @@ import time
 
 import numpy as np
 
+from repro.core.kernels import KERNEL_NAMES
 from repro.core.krr import KRRProblem, evaluate
 from repro.core.solver_api import solve as solve_any
 from repro.core.solver_api import tune
@@ -56,9 +57,10 @@ def main() -> None:
     ap.add_argument("--n", type=int, default=4_000)
     ap.add_argument("--d", type=int, default=8)
     ap.add_argument("--n-test", type=int, default=1_000)
-    ap.add_argument("--kernel", default="rbf")
+    ap.add_argument("--kernel", default="rbf", choices=KERNEL_NAMES,
+                    help="kernel zoo name (core.kernels.KERNEL_NAMES)")
     ap.add_argument("--kernels", default=None,
-                    help="comma-separated kernel names: tune a convex "
+                    help="comma-separated kernel zoo names: tune a convex "
                          "multi-kernel combination (weight random search)")
     ap.add_argument("--n-weight-samples", type=int, default=8,
                     help="Dirichlet weight draws for --kernels search")
@@ -153,6 +155,9 @@ def main() -> None:
                 "axis IS the random search (use --n-weight-samples, or "
                 "--policy halving to prune it)"
             )
+        bad = [k for k in args.kernels.split(",") if k not in KERNEL_NAMES]
+        if bad:
+            ap.error(f"unknown kernel(s) {bad}; available: {KERNEL_NAMES}")
         # the weight axis: every (w, lam, fold, head) candidate rides the
         # same stacked solve (repro.core.tune.tune_multikernel)
         tune_kw.update(

@@ -119,9 +119,21 @@ def bind_operator_from_config(
     """
     from repro.kernels.precision import check_precision
 
+    from repro.core.kernels import KERNEL_NAMES
+
     kernel = config["kernel"]
     sigma = config["sigma"]
     weights = config.get("weights")
+    # fail fast on kernel names HERE (a hand-edited export, or an export from
+    # a newer zoo than this server) rather than deep inside a jit trace;
+    # "precomputed" is valid — x_train is then the train Gram
+    names = kernel if isinstance(kernel, (tuple, list)) else (kernel,)
+    for k in names:
+        if k not in KERNEL_NAMES and k != "precomputed":
+            raise ValueError(
+                f"unknown kernel {k!r} in serving config; available: "
+                f"{KERNEL_NAMES + ('precomputed',)}"
+            )
     if isinstance(kernel, (tuple, list)):
         kernel = tuple(kernel)
         sigma = (
@@ -135,6 +147,11 @@ def bind_operator_from_config(
     backend = config.get("backend", "auto")
     precision = check_precision(config.get("precision", "f32"))
     if mesh is not None:
+        if kernel == "precomputed":
+            raise ValueError(
+                "kernel='precomputed' cannot serve over a mesh: the Gram "
+                "matrix has no row-sharded kernel evaluation path"
+            )
         from repro.distributed.sharded_operator import ShardedKernelOperator
 
         op = ShardedKernelOperator.bind(

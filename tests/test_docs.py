@@ -30,6 +30,10 @@ PUBLIC_MODULES = (
     "repro.distributed.sharded_operator",
     "repro.serving.krr_serve",
     "repro.serving.engine",
+    "repro.estimators",
+    "repro.estimators.base",
+    "repro.estimators.kernel_ridge",
+    "repro.estimators.cv",
 )
 
 PUBLIC_CALLABLES = {
@@ -55,14 +59,21 @@ PUBLIC_CALLABLES = {
     "repro.core.blocked_cg": ("blocked_cg",),
     "repro.kernels.precision": ("check_precision",),
     "repro.core.rff": ("rff_features", "rff_factors"),
+    "repro.core.kernels": ("kernel_family", "kernel_diag", "kernel_matrix"),
+    "repro.core.operator": ("widen_gram",),
+    "repro.estimators": ("resolve_sigma",),
 }
 
 #: classes whose public methods must each be documented
 PUBLIC_CLASSES = (
     ("repro.core.operator", "KernelOperator"),
+    ("repro.core.operator", "PrecomputedKernelOperator"),
     ("repro.core.multikernel", "WeightedSumKernelOperator"),
     ("repro.distributed.sharded_operator", "ShardedKernelOperator"),
     ("repro.serving.engine", "ServingEngine"),
+    ("repro.estimators", "KernelRidge"),
+    ("repro.estimators", "KernelRidgeCV"),
+    ("repro.estimators", "MultipleKernelRidgeCV"),
 )
 
 
@@ -120,7 +131,7 @@ def test_tuning_module_doctest():
 
 
 @pytest.mark.parametrize("doc", ["docs/tuning.md", "docs/solvers.md",
-                                 "docs/serving.md"])
+                                 "docs/serving.md", "docs/estimators.md"])
 def test_docs_quickstart_doctests(doc):
     res = doctest.testfile(
         str(ROOT / doc), module_relative=False,
@@ -132,7 +143,8 @@ def test_docs_quickstart_doctests(doc):
 
 def test_docs_exist_and_linked_from_readme():
     readme = (ROOT / "README.md").read_text()
-    for page in ("architecture", "tuning", "solvers", "serving"):
+    for page in ("architecture", "tuning", "solvers", "serving",
+                 "estimators"):
         assert (ROOT / "docs" / f"{page}.md").exists()
         assert f"docs/{page}.md" in readme, f"README must link docs/{page}.md"
 

@@ -1,0 +1,191 @@
+"""Estimator front-end behavior that does NOT need scikit-learn installed:
+edge-case shapes, validation errors, solver pass-through, and the CV
+reporting surface.  (The sklearn differential suite is
+tests/test_sklearn_api.py.)"""
+
+import numpy as np
+import pytest
+
+from repro.estimators import (
+    AUTO_DIRECT_MAX_N,
+    KernelRidge,
+    KernelRidgeCV,
+    MultipleKernelRidgeCV,
+    resolve_sigma,
+)
+
+
+def _data(rng, n=50, d=4, t=None):
+    X = rng.standard_normal((n, d)).astype(np.float32)
+    y = rng.standard_normal((n,) if t is None else (n, t)).astype(np.float32)
+    return X, y
+
+
+# ---------------------------------------------------------------------------
+# edge-case shapes
+# ---------------------------------------------------------------------------
+
+
+def test_n1_fit(rng):
+    X, y = _data(rng, n=1)
+    est = KernelRidge(alpha=1.0).fit(X, y)
+    p = np.asarray(est.predict(X))
+    assert p.shape == (1,) and np.isfinite(p).all()
+
+
+def test_d1_fit(rng):
+    X, y = _data(rng, d=1)
+    est = KernelRidge(alpha=0.5, kernel="laplacian").fit(X, y)
+    assert est.n_features_in_ == 1
+    assert np.asarray(est.predict(X)).shape == (50,)
+
+
+def test_empty_predict_dtype_follows_weights(rng):
+    X, y = _data(rng, t=3)
+    est = KernelRidge(alpha=0.5).fit(X, y)
+    p = est.predict(np.zeros((0, 4), np.float32))
+    assert p.shape == (0, 3)
+    assert p.dtype == est.dual_coef_.dtype
+
+
+def test_multioutput_shapes(rng):
+    X, y = _data(rng, t=4)
+    est = KernelRidge(alpha=0.5).fit(X, y)
+    assert est.dual_coef_.shape == (50, 4)
+    assert np.asarray(est.predict(X[:7])).shape == (7, 4)
+
+
+# ---------------------------------------------------------------------------
+# validation errors
+# ---------------------------------------------------------------------------
+
+
+def test_nonfinite_rejected(rng):
+    X, y = _data(rng)
+    Xb = X.copy(); Xb[3, 1] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        KernelRidge().fit(Xb, y)
+    yb = y.copy(); yb[0] = np.inf
+    with pytest.raises(ValueError, match="non-finite"):
+        KernelRidge().fit(X, yb)
+
+
+def test_shape_mismatch_rejected(rng):
+    X, y = _data(rng)
+    with pytest.raises(ValueError, match="row counts"):
+        KernelRidge().fit(X, y[:-1])
+    with pytest.raises(ValueError, match="2-D"):
+        KernelRidge().fit(X[:, 0], y)
+
+
+def test_nonsquare_precomputed_rejected(rng):
+    y = rng.standard_normal(6).astype(np.float32)
+    with pytest.raises(ValueError, match="square"):
+        KernelRidge(kernel="precomputed").fit(
+            rng.standard_normal((6, 9)).astype(np.float32), y
+        )
+
+
+def test_bad_hyperparams_rejected(rng):
+    X, y = _data(rng)
+    with pytest.raises(ValueError, match="alpha"):
+        KernelRidge(alpha=0.0).fit(X, y)
+    with pytest.raises(ValueError, match="sigma"):
+        KernelRidge(sigma=-1.0).fit(X, y)
+    with pytest.raises(ValueError, match="gamma"):
+        KernelRidge(gamma=-2.0).fit(X, y)
+    with pytest.raises(ValueError, match="unknown kernel"):
+        KernelRidge(kernel="nope").fit(X, y)
+    with pytest.raises(ValueError, match="unknown solver"):
+        KernelRidge(solver="nope").fit(X, y)
+
+
+# ---------------------------------------------------------------------------
+# sigma/gamma resolution + solver dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_sigma_table():
+    assert resolve_sigma("rbf", None, 0.5, 4) == 1.0  # sqrt(0.5/0.5)
+    assert resolve_sigma("laplacian", None, 0.25, 4) == 4.0
+    assert resolve_sigma("polynomial", None, 0.25, 4) == 2.0
+    assert resolve_sigma("rbf", 3.0, 0.5, 4) == 3.0  # sigma wins over gamma
+    assert resolve_sigma("linear", None, None, 4) == 1.0  # gamma-free
+    assert resolve_sigma("precomputed", None, None, 4) == 1.0
+    # default gamma = 1/n_features
+    assert resolve_sigma("laplacian", None, None, 8) == 8.0
+
+
+def test_solver_pass_through(rng):
+    X, y = _data(rng)
+    est = KernelRidge(
+        alpha=0.5, solver="pcg-nystrom",
+        solver_opts={"max_iters": 150, "tol": 1e-6, "rank": 20},
+    ).fit(X, y)
+    assert "iters" in est.solve_info_  # iterative path actually ran
+    direct = KernelRidge(alpha=0.5).fit(X, y)  # auto -> direct at this n
+    np.testing.assert_allclose(
+        np.asarray(est.predict(X[:5])), np.asarray(direct.predict(X[:5])),
+        rtol=1e-3, atol=1e-3,
+    )
+    assert X.shape[0] <= AUTO_DIRECT_MAX_N
+
+
+def test_unknown_solver_opt_rejected(rng):
+    X, y = _data(rng)
+    with pytest.raises(ValueError, match="unknown option"):
+        KernelRidge(solver="direct", solver_opts={"max_iters": 5}).fit(X, y)
+
+
+# ---------------------------------------------------------------------------
+# CV estimators (reporting surface; parity lives in test_sklearn_api.py)
+# ---------------------------------------------------------------------------
+
+
+def test_cv_results_surface(rng):
+    X, y = _data(rng)
+    cv = KernelRidgeCV(alphas=(0.1, 1.0), sigmas=(0.8, 1.5), cv=3).fit(X, y)
+    res = cv.cv_results_
+    assert len(res["param_sigma"]) == 4
+    assert res["mean_test_score"] == [-m for m in res["mean_test_mse"]]
+    best_idx = res["rank_test_score"].index(1)
+    assert res["param_alpha"][best_idx] == pytest.approx(cv.best_params_["alpha"])
+    assert cv.best_score_ == pytest.approx(max(res["mean_test_score"]), rel=1e-6)
+    assert cv.alpha_ in [pytest.approx(a) for a in (0.1, 1.0)]
+    assert cv.tune_result_.folds == 3
+
+
+def test_cv_random_policy(rng):
+    X, y = _data(rng)
+    cv = KernelRidgeCV(
+        alphas=(0.1, 1.0), sigmas=(0.8, 1.5), cv=3, policy="random",
+        num_samples=3, seed=7,
+    ).fit(X, y)
+    assert len(cv.cv_results_["param_sigma"]) == 3
+    assert np.asarray(cv.predict(X[:4])).shape == (4,)
+
+
+def test_multiple_kernel_cv_smoke(rng):
+    X, y = _data(rng, t=2)
+    mk = MultipleKernelRidgeCV(
+        kernels=("rbf", "laplacian"), alphas=(0.1, 1.0),
+        sigmas=(1.0, (0.8, 1.6)), cv=3, n_weight_samples=3, seed=2,
+    ).fit(X, y)
+    assert len(mk.kernel_weights_) == 2
+    assert sum(mk.kernel_weights_) == pytest.approx(1.0, abs=1e-5)
+    assert set(mk.best_params_) == {"alpha", "sigma", "weights"}
+    assert "param_weights" in mk.cv_results_
+    assert np.asarray(mk.predict(X[:6])).shape == (6, 2)
+
+
+def test_cv_precomputed_collapses_sigma_axis(rng):
+    from repro.core.kernels import kernel_matrix
+
+    X, y = _data(rng)
+    K = np.asarray(kernel_matrix("rbf", X, X, 1.2))
+    cv = KernelRidgeCV(
+        alphas=(0.1, 1.0), sigmas=(0.5, 2.0), kernel="precomputed", cv=3
+    ).fit(K, y)
+    # sigma axis is meaningless for a stored Gram: only the alphas are swept
+    assert len(cv.cv_results_["param_sigma"]) == 2
+    assert set(cv.cv_results_["param_sigma"]) == {1.0}

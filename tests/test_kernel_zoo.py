@@ -1,0 +1,159 @@
+"""Kernel-zoo properties: the mathematical invariants each zoo member must
+satisfy regardless of tile path, plus the precomputed-operator bit-identity
+claim.  Uses hypothesis when available and a deterministic parametrized
+sweep otherwise (same checks, fixed seeds), so the module always collects.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.kernels import (
+    KERNEL_FAMILIES,
+    KERNEL_NAMES,
+    UNIT_DIAG_KERNELS,
+    kernel_diag,
+    kernel_matrix,
+)
+from repro.kernels import ops
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+# sigmoid (tanh) is the textbook indefinite kernel — excluded from PSD
+PSD_KERNELS = tuple(k for k in KERNEL_NAMES if k != "sigmoid")
+
+
+def _x(seed, n=28, d=5):
+    return np.random.default_rng(seed).standard_normal((n, d)).astype(np.float32)
+
+
+def _tol(ref, rtol, atol):
+    """Scale atol to the reference magnitude: the dot-family kernels produce
+    O(10^2..10^4) entries, where a fixed atol sized for (0, 1]-range kernels
+    only measures f32 cancellation noise (see tests/test_kernels_pallas.py)."""
+    return dict(rtol=rtol, atol=atol * max(1.0, float(np.abs(ref).max())))
+
+
+def _check_symmetry(kern, seed):
+    x = _x(seed)
+    k = np.asarray(kernel_matrix(kern, x, x, 1.3))
+    np.testing.assert_allclose(k, k.T, **_tol(k, 0.0, 1e-5))
+
+
+def _check_psd(kern, seed):
+    x = _x(seed)
+    k = np.asarray(kernel_matrix(kern, x, x, 1.3), dtype=np.float64)
+    evals = np.linalg.eigvalsh((k + k.T) / 2)
+    assert evals.min() >= -1e-4 * max(1.0, evals.max())
+
+
+def _check_diag(kern, seed):
+    x = _x(seed)
+    k = np.asarray(kernel_matrix(kern, x, x, 0.9))
+    want = np.asarray(kernel_diag(kern, x, 0.9))
+    np.testing.assert_allclose(np.diag(k), want, **_tol(want, 1e-4, 1e-5))
+    if kern in UNIT_DIAG_KERNELS:
+        np.testing.assert_allclose(want, 1.0)
+
+
+def _check_backend_parity(kern, seed):
+    """xla streaming vs Pallas interpret tiles — same kernel, same numbers."""
+    r = np.random.default_rng(seed)
+    a = r.standard_normal((26, 7)).astype(np.float32)
+    b = r.standard_normal((41, 7)).astype(np.float32)
+    v = r.standard_normal((41, 2)).astype(np.float32)
+    xla = np.asarray(
+        ops.kernel_matvec(a, b, v, kernel=kern, sigma=1.1, backend="xla",
+                          chunk_a=16, chunk_b=16)
+    )
+    interp = np.asarray(
+        ops.kernel_matvec(a, b, v, kernel=kern, sigma=1.1, backend="interpret",
+                          chunk_a=16, chunk_b=16)
+    )
+    np.testing.assert_allclose(interp, xla, **_tol(xla, 3e-4, 3e-5))
+
+
+def _check_precomputed_bit_identity(kern, seed):
+    """A PrecomputedKernelOperator over the materialized Gram must return
+    exactly the stored entries — block access is a gather, not a recompute."""
+    from repro.core.multikernel import make_operator
+
+    x = _x(seed, n=24, d=4)
+    k_mem = np.asarray(kernel_matrix(kern, x, x, 1.2))
+    op = make_operator(x, kernel=kern, sigma=1.2, backend="xla")
+    pre = make_operator(k_mem, kernel="precomputed")
+    np.testing.assert_array_equal(np.asarray(pre.block(pre.x)), k_mem)
+    np.testing.assert_array_equal(
+        np.asarray(pre.block_idx(np.arange(5))), k_mem[:5, :5]
+    )
+    assert float(pre.trace_est()) == pytest.approx(float(np.trace(k_mem)), rel=1e-6)
+    # matvec through the gather path agrees with the fused operator
+    v = np.random.default_rng(seed + 1).standard_normal((24,)).astype(np.float32)
+    got, ref = np.asarray(pre.matvec(v)), np.asarray(op.matvec(v))
+    np.testing.assert_allclose(got, ref, **_tol(ref, 5e-5, 5e-5))
+
+
+def test_zoo_registry_consistent():
+    assert set(KERNEL_FAMILIES) == set(KERNEL_NAMES)
+    assert set(UNIT_DIAG_KERNELS) <= set(KERNEL_NAMES)
+    assert set(KERNEL_FAMILIES.values()) == {"l2", "l1", "dot", "cos"}
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(kern=st.sampled_from(KERNEL_NAMES), seed=st.integers(0, 2**16))
+    def test_property_symmetry(kern, seed):
+        _check_symmetry(kern, seed)
+
+    @settings(max_examples=15, deadline=None)
+    @given(kern=st.sampled_from(PSD_KERNELS), seed=st.integers(0, 2**16))
+    def test_property_psd(kern, seed):
+        _check_psd(kern, seed)
+
+    @settings(max_examples=15, deadline=None)
+    @given(kern=st.sampled_from(KERNEL_NAMES), seed=st.integers(0, 2**16))
+    def test_property_diag(kern, seed):
+        _check_diag(kern, seed)
+
+    @settings(max_examples=10, deadline=None)
+    @given(kern=st.sampled_from(KERNEL_NAMES), seed=st.integers(0, 2**16))
+    def test_property_backend_parity(kern, seed):
+        _check_backend_parity(kern, seed)
+
+    @settings(max_examples=8, deadline=None)
+    @given(kern=st.sampled_from(KERNEL_NAMES), seed=st.integers(0, 2**16))
+    def test_property_precomputed_bit_identity(kern, seed):
+        _check_precomputed_bit_identity(kern, seed)
+
+else:
+
+    @pytest.mark.parametrize("kern", KERNEL_NAMES)
+    @pytest.mark.parametrize("seed", range(3))
+    def test_property_symmetry(kern, seed):
+        _check_symmetry(kern, seed)
+
+    @pytest.mark.parametrize("kern", PSD_KERNELS)
+    @pytest.mark.parametrize("seed", range(3))
+    def test_property_psd(kern, seed):
+        _check_psd(kern, seed)
+
+    @pytest.mark.parametrize("kern", KERNEL_NAMES)
+    @pytest.mark.parametrize("seed", range(3))
+    def test_property_diag(kern, seed):
+        _check_diag(kern, seed)
+
+    @pytest.mark.parametrize("kern", KERNEL_NAMES)
+    @pytest.mark.parametrize("seed", range(2))
+    def test_property_backend_parity(kern, seed):
+        _check_backend_parity(kern, seed)
+
+    @pytest.mark.parametrize("kern", KERNEL_NAMES)
+    @pytest.mark.parametrize("seed", range(2))
+    def test_property_precomputed_bit_identity(kern, seed):
+        _check_precomputed_bit_identity(kern, seed)

@@ -32,6 +32,14 @@ def _dense(kern, a, b, sigma):
     return np.asarray(kernel_matrix(kern, a, b, sigma))
 
 
+def _tol(ref, rtol, atol):
+    """Tolerances scaled to the reference magnitude: the dot-family kernels
+    produce O(10^2..10^4) values (polynomial cubes the dots), where a fixed
+    absolute tolerance sized for (0, 1]-range kernels only measures
+    cancellation noise."""
+    return dict(rtol=rtol, atol=atol * max(1.0, float(np.abs(ref).max())))
+
+
 @pytest.mark.parametrize("kern", KERNEL_NAMES)
 @pytest.mark.parametrize("m,n,k", SHAPES)
 @pytest.mark.parametrize("backend", ["xla", "interpret"])
@@ -46,7 +54,7 @@ def test_kernel_matvec_allclose(rng, kern, m, n, k, backend):
         ops.kernel_matvec(a, b, v, kernel=kern, sigma=sigma, backend=backend,
                           chunk_a=64, chunk_b=96)
     )
-    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(got, want, **_tol(want, 2e-4, 2e-5))
 
 
 @pytest.mark.parametrize("kern", KERNEL_NAMES)
@@ -56,7 +64,7 @@ def test_kernel_block_allclose(rng, kern, backend):
     b = rng.standard_normal((171, 9)).astype(np.float32)
     want = _dense(kern, a, b, 0.9)
     got = np.asarray(ops.kernel_block(a, b, kernel=kern, sigma=0.9, backend=backend))
-    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(got, want, **_tol(want, 2e-4, 2e-5))
 
 
 @pytest.mark.parametrize("kern", KERNEL_NAMES)
@@ -70,7 +78,7 @@ def test_kernel_matvec_1d_vector(rng, kern):
             ops.kernel_matvec(a, b, v, kernel=kern, sigma=1.1, backend=backend)
         )
         assert got.shape == (19,)
-        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+        np.testing.assert_allclose(got, want, **_tol(want, 2e-4, 2e-5))
 
 
 def test_bf16_inputs_accumulate_f32(rng):
@@ -97,7 +105,7 @@ def test_bf16_inputs_accumulate_f32(rng):
 # pre-policy behavior (bit-identity is asserted in tests/test_precision.py).
 # ---------------------------------------------------------------------------
 
-_BF16_KW = dict(rtol=0.05, atol=0.02)
+_BF16_TOL = (0.05, 0.02)  # rtol, atol-per-unit-ref-magnitude (see _tol)
 
 
 @pytest.mark.parametrize("kern", KERNEL_NAMES)
@@ -116,7 +124,7 @@ def test_precision_bf16_matvec(rng, kern, backend, vshape):
                           chunk_a=16, chunk_b=32, precision="bf16")
     )
     assert got.dtype == np.float32 and got.shape == f32.shape
-    np.testing.assert_allclose(got, f32, **_BF16_KW)
+    np.testing.assert_allclose(got, f32, **_tol(f32, *_BF16_TOL))
 
 
 @pytest.mark.parametrize("kern", KERNEL_NAMES)
@@ -130,7 +138,7 @@ def test_precision_bf16_block(rng, kern, backend):
                          precision="bf16")
     )
     assert got.dtype == np.float32
-    np.testing.assert_allclose(got, f32, **_BF16_KW)
+    np.testing.assert_allclose(got, f32, **_tol(f32, *_BF16_TOL))
 
 
 @pytest.mark.parametrize("backend", ["xla", "interpret"])
@@ -157,7 +165,7 @@ def test_precision_bf16_multi_entry_points(rng, backend, vshape):
                chunk_a=8, chunk_b=16, precision="bf16", **kw)
         )
         assert got.dtype == np.float32 and got.shape == f32.shape
-        np.testing.assert_allclose(got, f32, **_BF16_KW)
+        np.testing.assert_allclose(got, f32, **_tol(f32, *_BF16_TOL))
 
     f32 = np.asarray(
         ops.kernel_block_multi(a, b, kernels=kernels, sigmas=sigmas,
@@ -169,7 +177,7 @@ def test_precision_bf16_multi_entry_points(rng, backend, vshape):
                                precision="bf16")
     )
     assert got.dtype == np.float32
-    np.testing.assert_allclose(got, f32, **_BF16_KW)
+    np.testing.assert_allclose(got, f32, **_tol(f32, *_BF16_TOL))
 
 
 def test_precision_rejects_unknown(rng):
@@ -201,17 +209,31 @@ def _check_matvec_oracle(m, n, d, kern, seed):
     got = np.asarray(
         ops.kernel_matvec(a, b, v, kernel=kern, sigma=1.0, backend="interpret")
     )
-    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-5)
+    np.testing.assert_allclose(got, want, **_tol(want, 3e-4, 3e-5))
 
 
 def _check_kernel_matrix_invariants(seed, kern):
-    """k(x,x)=1 on the diagonal; symmetry; values in (0, 1]."""
+    """Symmetry for every kernel; family-specific diagonal/range invariants
+    (only the distance kernels have unit diagonals and (0, 1] values — the
+    dot-product family's diagonal follows ||x||)."""
+    from repro.core.kernels import UNIT_DIAG_KERNELS, kernel_diag
+
     r = np.random.default_rng(seed)
     x = r.standard_normal((24, 6)).astype(np.float32)
     k = np.asarray(ops.kernel_block(x, x, kernel=kern, sigma=1.5, backend="xla"))
-    np.testing.assert_allclose(np.diag(k), 1.0, atol=1e-5)
     np.testing.assert_allclose(k, k.T, atol=1e-5)
-    assert (k > 0).all() and (k <= 1 + 1e-5).all()
+    np.testing.assert_allclose(
+        np.diag(k), np.asarray(kernel_diag(kern, x, 1.5)),
+        rtol=1e-4, atol=1e-5,
+    )
+    if kern in UNIT_DIAG_KERNELS:
+        np.testing.assert_allclose(np.diag(k), 1.0, atol=1e-5)
+    if kern in ("rbf", "laplacian", "matern52"):
+        assert (k > 0).all() and (k <= 1 + 1e-5).all()
+    if kern == "cosine":
+        assert (np.abs(k) <= 1 + 1e-5).all()
+    if kern == "sigmoid":
+        assert (np.abs(k) <= 1 + 1e-6).all()  # tanh range
 
 
 if HAVE_HYPOTHESIS:

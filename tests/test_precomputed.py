@@ -1,0 +1,152 @@
+"""PrecomputedKernelOperator: the full operator contract over a stored Gram.
+
+The design claim is that a precomputed solve is EXACTLY the in-memory solve
+— block access is a gather over stored entries (bit-identical, not allclose)
+and the direct solver therefore produces bit-identical dual weights.  The
+validation surface (non-square Grams, bad row-block widths, weights, mesh)
+must fail loudly at construction, not deep inside a solve.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.kernels import kernel_matrix
+from repro.core.krr import KRRProblem
+from repro.core.multikernel import make_operator
+from repro.core.operator import PrecomputedKernelOperator, widen_gram
+from repro.core.solver_api import solve, tune
+
+
+@pytest.fixture
+def gram_setup(rng):
+    x = rng.standard_normal((40, 5)).astype(np.float32)
+    k = np.asarray(kernel_matrix("rbf", x, x, 1.1))
+    return x, k
+
+
+def test_widen_gram_shape_and_idempotence(gram_setup):
+    _, k = gram_setup
+    wide = np.asarray(widen_gram(k))
+    assert wide.shape == (40, 41)
+    np.testing.assert_array_equal(wide[:, :-1], k)
+    np.testing.assert_array_equal(wide[:, -1], np.arange(40))
+    np.testing.assert_array_equal(np.asarray(widen_gram(wide)), wide)
+
+
+def test_widen_gram_rejects_bad_shapes(rng):
+    with pytest.raises(ValueError, match="square"):
+        widen_gram(rng.standard_normal((4, 7)))
+    with pytest.raises(ValueError, match="2-D"):
+        widen_gram(rng.standard_normal(5))
+
+
+def test_operator_contract_matches_dense(gram_setup, rng):
+    _, k = gram_setup
+    op = make_operator(k, kernel="precomputed")
+    assert isinstance(op, PrecomputedKernelOperator)
+    assert (op.n, op.n0, op.d) == (40, 40, 40)
+
+    # stored entries come back bit-identical, every access path
+    np.testing.assert_array_equal(np.asarray(op.block(op.x)), k)
+    np.testing.assert_array_equal(
+        np.asarray(op.block(op.x[3:9], op.x[:12])), k[3:9, :12]
+    )
+    idx = np.array([1, 7, 33])
+    np.testing.assert_array_equal(
+        np.asarray(op.block_idx(idx)), k[np.ix_(idx, idx)]
+    )
+    sub = op.restrict(idx)
+    np.testing.assert_array_equal(np.asarray(sub.block(sub.x)), k[np.ix_(idx, idx)])
+    assert float(op.trace_est()) == pytest.approx(float(np.trace(k)), rel=1e-6)
+
+    v = rng.standard_normal((40, 2)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(op.matvec(v)), k @ v, rtol=1e-5, atol=1e-5)
+    lam = np.float32(0.3)
+    np.testing.assert_allclose(
+        np.asarray(op.k_lam_matvec(v, lam)), k @ v + lam * v,
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_raw_row_block_accepted_for_predict(gram_setup, rng):
+    """(b, n0) un-widened rows — the predict-time cross Gram — work too."""
+    x, k = gram_setup
+    xt = rng.standard_normal((9, 5)).astype(np.float32)
+    kt = np.asarray(kernel_matrix("rbf", xt, x, 1.1))
+    op = make_operator(k, kernel="precomputed")
+    w = rng.standard_normal((40,)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(op.row_block_matvec(kt, w)), kt @ w, rtol=1e-5, atol=1e-5
+    )
+
+
+def test_bad_row_block_width_raises(gram_setup):
+    op = make_operator(gram_setup[1], kernel="precomputed")
+    with pytest.raises(ValueError, match="width"):
+        op.block(op.x[:4, :7])
+
+
+def test_direct_solve_bit_identical(gram_setup, rng):
+    """The acceptance criterion: same solver, same numbers, zero ulps."""
+    x, k = gram_setup
+    y = rng.standard_normal((40,)).astype(np.float32)
+    p_mem = KRRProblem(x=x, y=y, kernel="rbf", sigma=1.1, lam_unscaled=1e-3,
+                       backend="xla")
+    p_pre = KRRProblem(x=k, y=y, kernel="precomputed", sigma=1.0,
+                       lam_unscaled=1e-3, backend="xla")
+    w_mem = np.asarray(solve(p_mem, "direct").w)
+    w_pre = np.asarray(solve(p_pre, "direct").w)
+    np.testing.assert_array_equal(w_pre, w_mem)
+
+
+def test_iterative_solver_runs_on_precomputed(gram_setup, rng):
+    _, k = gram_setup
+    y = rng.standard_normal((40,)).astype(np.float32)
+    prob = KRRProblem(x=k, y=y, kernel="precomputed", lam_unscaled=1e-2,
+                      backend="xla")
+    out = solve(prob, "pcg-nystrom", max_iters=200, tol=1e-6, rank=20)
+    kn = k + 40 * 1e-2 * np.eye(40, dtype=np.float32)
+    np.testing.assert_allclose(kn @ np.asarray(out.w), y, rtol=1e-3, atol=1e-3)
+
+
+def test_tune_runs_on_precomputed(gram_setup, rng):
+    _, k = gram_setup
+    y = rng.standard_normal((40,)).astype(np.float32)
+    prob = KRRProblem(x=k, y=y, kernel="precomputed", backend="xla")
+    result = tune(prob, sigmas=(1.0,), lams=(1e-4, 1e-1), folds=3)
+    assert result.best["kernel"] == "precomputed"
+    assert len(result.records) == 2
+
+
+def test_make_operator_rejects_weights(gram_setup):
+    with pytest.raises(ValueError, match="weights"):
+        make_operator(gram_setup[1], kernel="precomputed", weights=(0.5, 0.5))
+
+
+def test_solve_and_tune_reject_mesh(gram_setup, rng):
+    import jax
+    from jax.sharding import Mesh
+
+    _, k = gram_setup
+    y = rng.standard_normal((40,)).astype(np.float32)
+    prob = KRRProblem(x=k, y=y, kernel="precomputed", lam_unscaled=1e-2,
+                      backend="xla")
+    mesh = Mesh(np.array(jax.devices()[:1]), ("rows",))
+    with pytest.raises(ValueError, match="mesh"):
+        solve(prob, "askotch", mesh=mesh)
+    with pytest.raises(ValueError, match="mesh"):
+        tune(prob, sigmas=(1.0,), lams=(1e-2,), folds=2, mesh=mesh)
+
+
+def test_serving_config_rejects_unknown_kernel(gram_setup, rng):
+    from repro.serving.krr_serve import bind_operator_from_config
+
+    x, k = gram_setup
+    w = rng.standard_normal((40,)).astype(np.float32)
+    with pytest.raises(ValueError, match="unknown kernel"):
+        bind_operator_from_config({"kernel": "rbf9000", "sigma": 1.0}, x, w)
+    # and "precomputed" IS valid single-device
+    op, _ = bind_operator_from_config(
+        {"kernel": "precomputed", "sigma": 1.0}, k, w
+    )
+    assert isinstance(op, PrecomputedKernelOperator)

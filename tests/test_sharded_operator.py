@@ -37,7 +37,10 @@ def mesh():
 
 
 @pytest.fixture(scope="module")
-def data(rng):
+def data():
+    # module-scoped: owns its generator (the shared rng fixture is
+    # function-scoped by design — see tests/conftest.py)
+    rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal((N, D)).astype(np.float32))
     v1 = jnp.asarray(rng.standard_normal((N,)).astype(np.float32))
     vt = jnp.asarray(rng.standard_normal((N, T)).astype(np.float32))
