@@ -19,7 +19,7 @@ import os
 
 import numpy as np
 
-from benchmarks.common import emit, note, timeit
+from benchmarks.common import emit, note, timeit, write_results
 
 
 def tile_roofline(d: int, bm: int = 256, bn: int = 256):
@@ -51,11 +51,15 @@ def main() -> None:
     import jax
 
     from repro.kernels import ops
+    from repro.obs import diff, snapshot
+    from repro.obs.metrics import record_tile_work
 
     smoke = os.environ.get("BENCH_KERNELS_SMOKE") == "1"
     sizes = ((20_000, 500),) if smoke else ((100_000, 1000), (400_000, 4000))
     iters = 2 if smoke else 3
 
+    snap0 = snapshot()
+    matvec_rows = []
     r = np.random.default_rng(0)
     d = 9
     for n, b in sizes:
@@ -74,13 +78,17 @@ def main() -> None:
                 )
 
             us = timeit(run, iters=iters)
+            record_tile_work(b, n, d, precision, count=iters)
             flops = b * n * (3 * d + 2)
             emit(f"kernel_matvec_n{n}_b{b}_{precision}", us,
                  f"gflops_cpu={flops/us/1e3:.2f}")
+            matvec_rows.append({"n": n, "b": b, "precision": precision,
+                                "us": us, "gflops_cpu": flops / us / 1e3})
 
     # Pallas tile analysis (bm=bn=256): MXU work vs VMEM traffic, per dtype.
     # bf16 tiles halve the bytes AND double the MXU rate — the two rows per d
     # show how much of the bf16 hardware peak each policy can reach.
+    tile_rows = []
     for dd in (9, 64, 256):
         for precision, intensity, bound, frac in tile_roofline(dd):
             note(
@@ -92,6 +100,18 @@ def main() -> None:
                 f"flops_per_byte={intensity:.1f};bound={bound};"
                 f"frac_peak_bf16={frac:.3f}",
             )
+            tile_rows.append({"d": dd, "precision": precision,
+                              "flops_per_byte": intensity, "bound": bound,
+                              "frac_peak_bf16": frac})
+
+    write_results("kernels", {
+        "smoke": smoke,
+        "matvec": matvec_rows,
+        "pallas_tiles": tile_rows,
+        # per-dtype FLOP/byte tallies from the metrics registry — the same
+        # counters the solvers bump via record_tile_work
+        "telemetry_delta": diff(snap0, snapshot()),
+    })
 
 
 if __name__ == "__main__":

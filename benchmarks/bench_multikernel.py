@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, note, timeit
+from benchmarks.common import emit, note, timeit, write_results
 
 KERNELS = ("rbf", "laplacian", "matern52")
 M_WEIGHTS, L_LAMS, K_FOLDS = 8, 4, 5
@@ -29,7 +29,9 @@ def main() -> None:
 
     from repro.core.krr import KRRProblem
     from repro.core.tune import tune_multikernel
+    from repro.obs import diff, snapshot
 
+    snap0 = snapshot()
     r = np.random.default_rng(0)
     n, d = 512, 6
     x = jnp.asarray(r.standard_normal((n, d)).astype(np.float32))
@@ -86,6 +88,16 @@ def main() -> None:
     note(f"wall: shared {us_shared / 1e6:.1f} s vs naive {us_naive / 1e6:.1f} s")
     note("weight candidates are columns: a c-candidate search costs ~1 "
          "solve's kernel work per sigma — the multi-kernel acceptance claim")
+
+    write_results("multikernel", {
+        "n": n, "d": d, "kernels": list(KERNELS),
+        "weight_samples": M_WEIGHTS, "lams": L_LAMS, "folds": K_FOLDS,
+        "candidates": rs.info["candidates"],
+        "shared": {"us": us_shared, "sweeps": float(rs.sweeps)},
+        "naive": {"us": us_naive, "sweeps": float(rn.sweeps)},
+        "sweep_ratio": float(rn.sweeps / rs.sweeps),
+        "telemetry_delta": diff(snap0, snapshot()),
+    })
 
 
 if __name__ == "__main__":

@@ -34,7 +34,7 @@ import os
 
 import numpy as np
 
-from benchmarks.common import emit, note, timeit
+from benchmarks.common import emit, note, timeit, write_results
 
 
 def main() -> None:
@@ -42,8 +42,10 @@ def main() -> None:
 
     from repro.core.krr import KRRProblem
     from repro.core.tune import tune
+    from repro.obs import diff, snapshot
 
     smoke = os.environ.get("BENCH_TUNING_SMOKE", "") == "1"
+    snap0 = snapshot()  # telemetry baseline: kernel pairs / CG iters delta
     r = np.random.default_rng(0)
     n, d = (320, 6) if smoke else (768, 6)
     s_sigmas, l_lams, k_folds = 3, 8, 5
@@ -139,6 +141,20 @@ def main() -> None:
     note(f"wall: grid {us_grid / 1e6:.1f} s vs halving {us_halving / 1e6:.1f} s")
     note("one stacked multi-RHS solve per sigma == the tile-sharing claim; "
          "halving ends each solve at the survivors' convergence")
+
+    record = {
+        "smoke": smoke,
+        "n": n, "d": d,
+        "sigmas": s_sigmas, "lams": l_lams, "folds": k_folds,
+        "shared": {"us": us_shared, "sweeps": float(rs.sweeps)},
+        "grid": {"us": us_grid, "sweeps": float(rg.sweeps)},
+        "halving": {"us": us_halving, "sweeps": float(rh.sweeps),
+                    "pruned": pruned},
+        "telemetry_delta": diff(snap0, snapshot()),
+    }
+    if not smoke:
+        record["naive"] = {"us": us_naive, "sweeps": float(rn.sweeps)}
+    write_results("tuning", record)
 
 
 if __name__ == "__main__":

@@ -14,6 +14,9 @@
 # Scaled to CPU execution (the container is the oracle runtime; TPU numbers
 # come from the dry-run roofline in EXPERIMENTS.md).  Select a subset with
 #   python -m benchmarks.run fig1 ablation
+#
+# ``python -m benchmarks.run obs-report <telemetry.jsonl>...`` is not a bench:
+# it validates + summarizes telemetry JSONL files (repro.obs.report).
 from __future__ import annotations
 
 import sys
@@ -21,6 +24,11 @@ import traceback
 
 
 def main() -> None:
+    want = sys.argv[1:]
+    if want and want[0] == "obs-report":
+        from repro.obs import report
+
+        raise SystemExit(report.main(want[1:]))
     from benchmarks import (
         bench_ablation,
         bench_dist_scaling,
@@ -46,7 +54,7 @@ def main() -> None:
         "multikernel": bench_multikernel.main,
         "serving": bench_serving.main,
     }
-    want = sys.argv[1:] or list(benches)
+    want = want or list(benches)
     failed = []
     for name in want:
         print(f"# --- {name} ---", file=sys.stderr, flush=True)

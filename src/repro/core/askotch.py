@@ -45,6 +45,8 @@ from repro.core.nystrom import (
     stable_inv_apply_setup,
     woodbury_inv_apply,
 )
+from repro.obs.metrics import record_tile_work
+from repro.obs.telemetry import as_telemetry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -251,6 +253,7 @@ def solve(
     time_budget_s: float | None = None,
     callback: Callable[[int, SolverState, dict], None] | None = None,
     w0: jax.Array | None = None,
+    telemetry=None,
 ) -> SolveResult:
     """Python-loop driver: jitted steps + periodic full-residual evaluation.
 
@@ -258,39 +261,55 @@ def solve(
     the per-head and aggregate reports), so it is only computed every
     ``eval_every`` iterations (and at the end).  History records carry
     ``rel_residual`` (aggregate over heads) and ``rel_residual_per_head``.
+
+    ``telemetry`` (a ``repro.obs.Telemetry``) adds a solve span, canonical
+    trace events mirroring the history records, and per-iteration tile-work
+    metrics; ``None`` (default) keeps the whole telemetry path to a single
+    identity check.
     """
     cfg = cfg or ASkotchConfig()
+    tel = as_telemetry(telemetry)
+    solver_name = "askotch" if cfg.accelerated else "skotch"
+    n, b, d = problem.n, cfg.resolve_block(problem.n), problem.x.shape[1]
+    precision = getattr(problem.op, "precision", "f32")
+    recorder = tel.recorder(solver_name, precision=precision, n=n)
     probs = _maybe_arls_probs(problem, cfg, seed)
     step = jax.jit(make_step(problem, cfg, probs))
     state = init_state(problem, seed, w0)
-    history: list[dict] = []
-    t0 = time.perf_counter()
-    converged = False
-    it = 0
-    for it in range(1, max_iters + 1):
-        state, aux = step(state)
-        if it % eval_every == 0 or it == max_iters:
-            rel_agg, rel_heads = problem.residual_report(state.w)
-            rel = float(rel_agg)
-            rec = {
-                "iter": it,
-                "rel_residual": rel,
-                "rel_residual_per_head": [float(v) for v in rel_heads],
-                "sketch_res": float(jnp.linalg.norm(state.sketch_res)),
-                "step_L": float(aux.step_l),
-                "time_s": time.perf_counter() - t0,
-            }
-            history.append(rec)
-            if callback:
-                callback(it, state, rec)
-            # every head must pass (aggregate alone dilutes a bad head by
-            # ~1/sqrt(t)); identical to the aggregate test when t = 1, and
-            # the same convergence meaning as blocked_cg
-            if bool(jnp.all(rel_heads < tol)):
-                converged = True
+    history = recorder.history
+    tel_enabled = tel.enabled  # hoisted: the loop pays one bool test
+    with tel.span(f"solve/{solver_name}", n=n, t=problem.t, b=b,
+                  max_iters=max_iters, tol=tol):
+        t0 = time.perf_counter()
+        converged = False
+        it = 0
+        for it in range(1, max_iters + 1):
+            state, aux = step(state)
+            if tel_enabled:
+                # per-step kernel-tile work: K_BB block + the (b, n) fused
+                # row-block matvec (host-loop counting — exact per execution)
+                record_tile_work(b, b, d, precision)
+                record_tile_work(b, n, d, precision)
+            if it % eval_every == 0 or it == max_iters:
+                rel_agg, rel_heads = problem.residual_report(state.w)
+                rel = float(rel_agg)
+                rec = recorder.add(
+                    it, rel,
+                    rel_residual_per_head=[float(v) for v in rel_heads],
+                    sketch_res=float(jnp.linalg.norm(state.sketch_res)),
+                    step_L=float(aux.step_l),
+                    time_s=time.perf_counter() - t0,
+                )
+                if callback:
+                    callback(it, state, rec)
+                # every head must pass (aggregate alone dilutes a bad head by
+                # ~1/sqrt(t)); identical to the aggregate test when t = 1, and
+                # the same convergence meaning as blocked_cg
+                if bool(jnp.all(rel_heads < tol)):
+                    converged = True
+                    break
+            if time_budget_s is not None and time.perf_counter() - t0 > time_budget_s:
                 break
-        if time_budget_s is not None and time.perf_counter() - t0 > time_budget_s:
-            break
     return SolveResult(
         w=state.w,
         iters=it,

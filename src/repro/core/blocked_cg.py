@@ -38,6 +38,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.metrics import counter as _obs_counter
+from repro.obs.trace import TraceRecorder
+
 #: signature of the external-freeze hook: ``(it, x, rel_heads, frozen) ->
 #: bool mask of columns to freeze now (or None)``; ``frozen`` is the
 #: cumulative external-freeze mask so far and the returned mask is OR-ed in.
@@ -69,6 +72,7 @@ def blocked_cg(
     time_budget_s: float | None = None,
     freeze_at: "tuple[int, ...] | list[int] | None" = None,
     freeze_callback: FreezeCallback | None = None,
+    recorder: "TraceRecorder | None" = None,
 ) -> BlockedCGResult:
     """Solve A X = RHS column-blocked, RHS of shape (p, t).
 
@@ -87,7 +91,13 @@ def blocked_cg(
     ``rel_residual_per_head = 0``.  ``result.frozen`` reports the final
     external-freeze mask; ``converged`` stays the strict all-columns-below-
     tol statement.
+
+    ``recorder`` (a ``repro.obs.trace.TraceRecorder``) receives every
+    iterate; callers that don't pass one still get the same ``history``
+    list via an internal recorder's compatibility view.
     """
+    if recorder is None:
+        recorder = TraceRecorder("cg")
     t0 = time.perf_counter() if t0 is None else t0
     tiny = jnp.finfo(rhs.dtype).tiny
     rhs_norm_raw = jnp.linalg.norm(rhs, axis=0)  # (t,) true norms, may be 0
@@ -109,7 +119,7 @@ def blocked_cg(
     else:
         x = x0
         r = rhs - matvec(x0)
-    history: list[dict] = []
+    history = recorder.history
     converged = bool(ext_frozen.all())
     if converged:  # every column zero: nothing to solve
         return BlockedCGResult(
@@ -139,12 +149,11 @@ def blocked_cg(
         # externally PRUNED columns keep their true (stale) residual
         rel_heads_np = col_norms / rhs_norm_np
         rel = float(np.sqrt((col_norms**2).sum())) / rhs_norm_f
-        history.append({
-            "iter": it,
-            "rel_residual": rel,
-            "rel_residual_per_head": rel_heads_np.tolist(),
-            "time_s": time.perf_counter() - t0,
-        })
+        recorder.add(
+            it, rel,
+            rel_residual_per_head=rel_heads_np.tolist(),
+            time_s=time.perf_counter() - t0,
+        )
         below = rel_heads_np < tol
         if bool(below.all()):
             converged = True
@@ -165,6 +174,11 @@ def blocked_cg(
         rz = rz_new * keep
         if time_budget_s is not None and time.perf_counter() - t0 > time_budget_s:
             break
+    if it:
+        _obs_counter(
+            "repro_cg_iterations_total",
+            help="blocked-CG iterations executed (all callers)",
+        ).inc(it)
     return BlockedCGResult(
         x=x, iters=it, history=history, converged=converged,
         frozen=ext_frozen if ext_frozen.any() else None,

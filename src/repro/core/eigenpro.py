@@ -29,6 +29,8 @@ import jax.numpy as jnp
 
 from repro.core.krr import KRRProblem
 from repro.core.operator import as_multirhs, maybe_squeeze
+from repro.obs.metrics import record_tile_work
+from repro.obs.telemetry import as_telemetry
 
 
 @dataclasses.dataclass
@@ -50,7 +52,11 @@ def solve_eigenpro(
     seed: int = 0,
     eval_every: int = 100,
     time_budget_s: float | None = None,
+    telemetry=None,
 ) -> EigenProResult:
+    """EigenPro 2.0 SGD solve (module docstring has the update rule);
+    ``telemetry`` adds a span, trace events, and per-batch tile metrics."""
+    tel = as_telemetry(telemetry)
     t0 = time.perf_counter()
     n = problem.n
     op = problem.op
@@ -86,26 +92,34 @@ def solve_eigenpro(
         return w
 
     w = jnp.zeros_like(y)
-    history: list[dict] = []
+    recorder = tel.recorder("eigenpro", n=n)
+    history = recorder.history
+    tel_enabled = tel.enabled
+    d = x.shape[1]
     steps_per_epoch = n // bs
     it = 0
-    for ep in range(epochs):
-        kperm, kp = jax.random.split(kperm)
-        perm = jax.random.permutation(kp, n)
-        for sidx in range(steps_per_epoch):
-            batch_idx = jax.lax.dynamic_slice_in_dim(perm, sidx * bs, bs)
-            w = epoch_step(w, batch_idx)
-            it += 1
-            if it % eval_every == 0:
-                rel_agg, rel_heads = problem.residual_report(w)
-                history.append({
-                    "iter": it,
-                    "rel_residual": float(rel_agg),
-                    "rel_residual_per_head": [float(v) for v in rel_heads],
-                    "time_s": time.perf_counter() - t0,
-                })
-            if time_budget_s is not None and time.perf_counter() - t0 > time_budget_s:
-                return EigenProResult(
-                    maybe_squeeze(w, squeeze), it, history, time.perf_counter() - t0
-                )
+    with tel.span("solve/eigenpro", n=n, t=problem.t, rank=rank, bs=bs,
+                  epochs=epochs):
+        for ep in range(epochs):
+            kperm, kp = jax.random.split(kperm)
+            perm = jax.random.permutation(kp, n)
+            for sidx in range(steps_per_epoch):
+                batch_idx = jax.lax.dynamic_slice_in_dim(perm, sidx * bs, bs)
+                w = epoch_step(w, batch_idx)
+                it += 1
+                if tel_enabled:
+                    # fused (bs, n) gradient pass + (s, bs) correction pass
+                    record_tile_work(bs, n, d)
+                    record_tile_work(s, bs, d)
+                if it % eval_every == 0:
+                    rel_agg, rel_heads = problem.residual_report(w)
+                    recorder.add(
+                        it, float(rel_agg),
+                        rel_residual_per_head=[float(v) for v in rel_heads],
+                        time_s=time.perf_counter() - t0,
+                    )
+                if time_budget_s is not None and time.perf_counter() - t0 > time_budget_s:
+                    return EigenProResult(
+                        maybe_squeeze(w, squeeze), it, history, time.perf_counter() - t0
+                    )
     return EigenProResult(maybe_squeeze(w, squeeze), it, history, time.perf_counter() - t0)

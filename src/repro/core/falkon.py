@@ -25,6 +25,8 @@ from jax.scipy.linalg import solve_triangular
 from repro.core.blocked_cg import blocked_cg
 from repro.core.krr import KRRProblem
 from repro.core.operator import as_multirhs, maybe_squeeze
+from repro.obs.metrics import record_tile_work
+from repro.obs.telemetry import as_telemetry
 
 
 @dataclasses.dataclass
@@ -45,7 +47,11 @@ def solve_falkon(
     seed: int = 0,
     jitter: float = 1e-7,
     time_budget_s: float | None = None,
+    telemetry=None,
 ) -> FalkonResult:
+    """Falkon solve with ``m`` uniformly sampled centers (module docstring
+    has the math); ``telemetry`` adds a span + canonical trace events."""
+    tel = as_telemetry(telemetry)
     t0 = time.perf_counter()
     n = problem.n
     key = jax.random.PRNGKey(seed)
@@ -82,10 +88,20 @@ def solve_falkon(
     rhs = to_precond(op.row_block_matvec(op_m.x, y))  # (m, t)
 
     # plain blocked CG on the Falkon-preconditioned operator (pinv = None)
-    res = blocked_cg(
-        operator, rhs, max_iters=max_iters, tol=tol, t0=t0,
-        time_budget_s=time_budget_s,
-    )
+    with tel.span("solve/falkon", n=n, m=m, t=problem.t, max_iters=max_iters,
+                  tol=tol):
+        res = blocked_cg(
+            operator, rhs, max_iters=max_iters, tol=tol, t0=t0,
+            time_budget_s=time_budget_s,
+            recorder=tel.recorder("falkon", n=n),
+        )
+        if tel.enabled:
+            # each CG iteration streams K_nm and K_mn (plus one K_mn for the
+            # RHS setup and the m^2 block build)
+            d = problem.x.shape[1]
+            record_tile_work(n, m, d, count=res.iters)
+            record_tile_work(m, n, d, count=res.iters + 1)
+            record_tile_work(m, m, d)
 
     return FalkonResult(
         w=maybe_squeeze(from_beta(res.x), squeeze),

@@ -34,6 +34,8 @@ from repro.core.krr import KRRProblem
 from repro.core.nystrom import NystromFactors, nystrom_from_sketch
 from repro.core.operator import as_multirhs, maybe_squeeze
 from repro.core.rpcholesky import rp_cholesky
+from repro.obs.metrics import record_tile_work
+from repro.obs.telemetry import as_telemetry
 
 
 @dataclasses.dataclass
@@ -110,6 +112,7 @@ def solve_pcg(
     seed: int = 0,
     time_budget_s: float | None = None,
     w0: jax.Array | None = None,
+    telemetry=None,
 ) -> PCGResult:
     """Blocked PCG on (K + lam I) W = Y with per-column residual tracking.
 
@@ -117,21 +120,34 @@ def solve_pcg(
     ``rel_residual_per_head``; convergence requires every column below tol.
     ``w0`` warm-starts the iteration (e.g. the fold-averaged CV solution a
     tuning sweep hands back, ``TuneResult.best_w0``) at the cost of one
-    extra matvec for the initial residual.
+    extra matvec for the initial residual.  ``telemetry`` adds a solve span,
+    canonical per-iteration trace events, and tile-work metrics.
     """
-    t0 = time.perf_counter()
-    pinv = make_preconditioner(problem, precond, rank, rho_mode, seed)
-    matvec = jax.jit(problem.k_lam_matvec)
-    pinv = jax.jit(pinv)
+    tel = as_telemetry(telemetry)
+    n = problem.n
+    d = problem.x.shape[1]
+    precision = getattr(problem.op, "precision", "f32")
+    recorder = tel.recorder("pcg", precision=precision, n=n)
+    with tel.span("solve/pcg", n=n, t=problem.t, precond=precond, rank=rank,
+                  max_iters=max_iters, tol=tol):
+        t0 = time.perf_counter()
+        pinv = make_preconditioner(problem, precond, rank, rho_mode, seed)
+        matvec = jax.jit(problem.k_lam_matvec)
+        pinv = jax.jit(pinv)
 
-    y, squeeze = as_multirhs(problem.y)
-    x0 = None
-    if w0 is not None:
-        x0, _ = as_multirhs(jnp.asarray(w0))
-    res = blocked_cg(
-        matvec, y, pinv, x0=x0, max_iters=max_iters, tol=tol, t0=t0,
-        time_budget_s=time_budget_s,
-    )
+        y, squeeze = as_multirhs(problem.y)
+        x0 = None
+        if w0 is not None:
+            x0, _ = as_multirhs(jnp.asarray(w0))
+        res = blocked_cg(
+            matvec, y, pinv, x0=x0, max_iters=max_iters, tol=tol, t0=t0,
+            time_budget_s=time_budget_s, recorder=recorder,
+        )
+        if tel.enabled:
+            # each CG iteration streams one full (n, n) K matvec; the warm
+            # start costs one extra for the initial residual
+            record_tile_work(n, n, d, precision,
+                             count=res.iters + (1 if x0 is not None else 0))
     return PCGResult(
         w=maybe_squeeze(res.x, squeeze), iters=res.iters, history=res.history,
         converged=res.converged, wall_time_s=time.perf_counter() - t0,

@@ -28,6 +28,7 @@ import jax
 from repro.core import askotch, direct, eigenpro, falkon, pcg
 from repro.core.krr import KRRProblem
 from repro.kernels.precision import check_precision
+from repro.obs.telemetry import as_telemetry
 
 METHODS = (
     "askotch",
@@ -103,6 +104,7 @@ TUNE_OPTIONS: tuple[str, ...] = (
     "sigmas", "lams", "folds", "search", "num_samples", "policy",
     "halving_eta", "sigma_continuation", "strategy",
     "rank", "max_iters", "tol", "seed", "warm_start", "precision",
+    "telemetry",
 )
 
 #: accepted keyword options of tune() on the multi-kernel (weight-axis)
@@ -112,6 +114,7 @@ MULTIKERNEL_TUNE_OPTIONS: tuple[str, ...] = (
     "kernels", "sigmas", "lams", "folds", "n_weight_samples", "weights",
     "dirichlet_alpha", "policy", "halving_eta", "sigma_continuation",
     "strategy", "rank", "max_iters", "tol", "seed", "warm_start", "precision",
+    "telemetry",
 )
 
 
@@ -198,7 +201,9 @@ def tune(problem: KRRProblem, *, mesh=None, **kw):
       **kw: any of :data:`TUNE_OPTIONS` (``sigmas``, ``lams``, ``folds``,
         ``search``, ``num_samples``, ``policy``, ``halving_eta``,
         ``sigma_continuation``, ``strategy``, ``rank``, ``max_iters``,
-        ``tol``, ``seed``, ``warm_start``) — or, on the multi-kernel path,
+        ``tol``, ``seed``, ``warm_start``, ``telemetry`` — a
+        ``repro.obs.Telemetry`` session recording spans/traces/metrics for
+        the whole search) — or, on the multi-kernel path,
         :data:`MULTIKERNEL_TUNE_OPTIONS` (adds ``kernels``,
         ``n_weight_samples``, ``weights``, ``dirichlet_alpha``; drops
         ``search``/``num_samples``).  Unknown options raise ValueError with
@@ -270,7 +275,10 @@ def solve(problem: KRRProblem, method: str = "askotch", *, mesh=None, **kw) -> S
         and ``solve(p, "askotch", precision="bf16")`` runs every kernel
         sweep with bf16 tiles + f32 accumulation (solver internals stay f32;
         a ``tol`` below ~1e-6 triggers a warning since bf16 tiles cannot
-        reach machine-precision residuals).
+        reach machine-precision residuals).  A fourth universal option,
+        ``telemetry=`` (a ``repro.obs.Telemetry``), records a solve span,
+        canonical per-iteration trace events, and tile-work metrics for any
+        method; the default ``None`` costs a single identity check.
 
     Returns:
       A :class:`SolveOutput`: ``w`` ((n,), (n, t), or (m[, t]) for Falkon's
@@ -280,6 +288,7 @@ def solve(problem: KRRProblem, method: str = "askotch", *, mesh=None, **kw) -> S
     """
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; available: {METHODS}")
+    telemetry = kw.pop("telemetry", None)
     if "kernel" in kw or "weights" in kw or "precision" in kw:
         # universal overrides: rebuild the problem, then solve through the
         # unchanged per-method path (the operator layer absorbs the weighted
@@ -308,12 +317,15 @@ def solve(problem: KRRProblem, method: str = "askotch", *, mesh=None, **kw) -> S
                 "evaluation path — drop mesh= or pass the raw features with "
                 "a kernel name"
             )
-        return _solve_dist(problem, method, mesh, kw)
+        tel = as_telemetry(telemetry)
+        with tel.span(f"solve/dist-{method}", n=problem.n, t=problem.t,
+                      mesh=dict(mesh.shape)):
+            return _solve_dist(problem, method, mesh, kw)
     _validate_options(method, kw)
     if method in ("askotch", "skotch"):
         cfg_kw = {k: kw.pop(k) for k in _ASKOTCH_CFG_KEYS if k in kw}
         cfg = askotch.ASkotchConfig(accelerated=(method == "askotch"), **cfg_kw)
-        res = askotch.solve(problem, cfg, **kw)
+        res = askotch.solve(problem, cfg, telemetry=telemetry, **kw)
         return SolveOutput(
             method=method,
             w=res.w,
@@ -327,7 +339,7 @@ def solve(problem: KRRProblem, method: str = "askotch", *, mesh=None, **kw) -> S
             "pcg-nystrom": "nystrom", "pcg-rpcholesky": "rpcholesky",
             "pcg-rff": "rff", "cg": "identity",
         }[method]
-        res = pcg.solve_pcg(problem, precond=precond, **kw)
+        res = pcg.solve_pcg(problem, precond=precond, telemetry=telemetry, **kw)
         return SolveOutput(
             method=method,
             w=res.w,
@@ -337,7 +349,7 @@ def solve(problem: KRRProblem, method: str = "askotch", *, mesh=None, **kw) -> S
             predict_fn=lambda xt: problem.predict(res.w, xt),
         )
     if method == "falkon":
-        res = falkon.solve_falkon(problem, **kw)
+        res = falkon.solve_falkon(problem, telemetry=telemetry, **kw)
         return SolveOutput(
             method=method,
             w=res.w,
@@ -347,7 +359,7 @@ def solve(problem: KRRProblem, method: str = "askotch", *, mesh=None, **kw) -> S
             predict_fn=lambda xt: falkon.falkon_predict(problem, res, xt),
         )
     if method == "eigenpro":
-        res = eigenpro.solve_eigenpro(problem, **kw)
+        res = eigenpro.solve_eigenpro(problem, telemetry=telemetry, **kw)
         return SolveOutput(
             method=method,
             w=res.w,
@@ -357,7 +369,9 @@ def solve(problem: KRRProblem, method: str = "askotch", *, mesh=None, **kw) -> S
             predict_fn=lambda xt: problem.predict(res.w, xt),
         )
     # direct
-    w = direct.solve_direct(problem)
+    with as_telemetry(telemetry).span("solve/direct", n=problem.n,
+                                      t=problem.t):
+        w = direct.solve_direct(problem)
     return SolveOutput(
         method=method,
         w=w,

@@ -42,6 +42,7 @@ from repro.core.tune.policies import (
     TuneSpace,
     make_policy,
 )
+from repro.obs.telemetry import as_telemetry
 
 SEARCHES = ("grid", "random")
 STRATEGIES = ("shared", "naive")
@@ -186,6 +187,7 @@ def run_search(
     sigma_continuation: bool,
     mesh,
     extra_info: dict[str, Any] | None = None,
+    telemetry=None,
 ) -> TuneResult:
     """Drive ``policy`` over the stacked engine and assemble a TuneResult.
 
@@ -193,8 +195,11 @@ def run_search(
     entry point re-states the problem as the kernel tuple being searched);
     ``problem`` supplies ``y`` and the best-config ``backend``.  Single- and
     multi-kernel searches, all three policies, shared and naive strategies,
-    local and mesh runs all flow through here.
+    local and mesh runs all flow through here.  ``telemetry`` adds a search
+    span, a per-group span, and canonical trace events (solver ``"tune"``,
+    with running ``sweeps``) from every stacked solve.
     """
+    tel = as_telemetry(telemetry)
     n = problem.n
     # single-kernel random search consumes this stream exactly like the
     # pre-PR-5 _candidates() did; the multi-kernel weight matrix was already
@@ -220,19 +225,24 @@ def run_search(
         if strategy == "shared":
             op = operator_for(base_problem, group.sigma, mesh)
             rung_iters = policy.rungs(group, max_iters)
-            gr = solve_sigma_group(
-                op, y_np, group, val_folds, rank=min(rank, n),
-                max_iters=max_iters, tol=tol, seed=seed,
-                warm_start=warm_start, counter=counter,
-                rung_iters=rung_iters,
-                prune_fn=(
-                    lambda ri, it, scores, active, g=group: policy.prune(
-                        g, ri, it, scores, active
-                    )
-                ),
-                continuation=cont,
-                want_continuation=sigma_continuation,
-            )
+            with tel.span("tune/group", sigma=group.sigma,
+                          candidates=group.n_candidates):
+                gr = solve_sigma_group(
+                    op, y_np, group, val_folds, rank=min(rank, n),
+                    max_iters=max_iters, tol=tol, seed=seed,
+                    warm_start=warm_start, counter=counter,
+                    rung_iters=rung_iters,
+                    prune_fn=(
+                        lambda ri, it, scores, active, g=group: policy.prune(
+                            g, ri, it, scores, active
+                        )
+                    ),
+                    continuation=cont,
+                    want_continuation=sigma_continuation,
+                    recorder=tel.recorder(
+                        "tune", sweep_counter=counter, n=n
+                    ) if tel.enabled else None,
+                )
             iters_by_sigma[group.sigma] = gr.iters
             cont = gr.continuation  # None unless sigma_continuation
             group_records: list[dict[str, Any]] = []
@@ -465,6 +475,7 @@ def tune(
     seed: int = 0,
     warm_start: bool = True,
     mesh=None,
+    telemetry=None,
 ) -> TuneResult:
     """Policy-driven search over (sigma, lam_unscaled) with k-fold CV.
 
@@ -508,6 +519,9 @@ def tune(
         :class:`~repro.distributed.sharded_operator.ShardedKernelOperator`
         with x/iterates row-sharded (a 1-device mesh is valid everywhere);
         every policy runs unchanged over a mesh.
+      telemetry: optional ``repro.obs.Telemetry`` — records a search span,
+        per-sigma-group spans, canonical trace events from every stacked
+        solve, and the kernel-pair counter the sweep accounting feeds.
 
     Returns:
       A :class:`TuneResult`; ``result.best`` is the serving-ready config,
@@ -526,12 +540,17 @@ def tune(
         lams=tuple(float(lv) for lv in lams),
         num_samples=num_samples,
     )
-    return run_search(
-        problem, problem, space, resolved,
-        folds=folds, strategy=strategy, rank=rank, max_iters=max_iters,
-        tol=tol, seed=seed, warm_start=warm_start,
-        sigma_continuation=sigma_continuation, mesh=mesh,
-    )
+    with as_telemetry(telemetry).span(
+        "tune/search", n=problem.n, folds=folds, policy=resolved.name,
+        strategy=strategy,
+    ):
+        return run_search(
+            problem, problem, space, resolved,
+            folds=folds, strategy=strategy, rank=rank, max_iters=max_iters,
+            tol=tol, seed=seed, warm_start=warm_start,
+            sigma_continuation=sigma_continuation, mesh=mesh,
+            telemetry=telemetry,
+        )
 
 
 def tune_multikernel(
@@ -554,6 +573,7 @@ def tune_multikernel(
     seed: int = 0,
     warm_start: bool = True,
     mesh=None,
+    telemetry=None,
 ) -> TuneResult:
     """Search over convex kernel combinations with k-fold CV.
 
@@ -582,7 +602,8 @@ def tune_multikernel(
       halving_eta / sigma_continuation: as in :func:`tune`.
       strategy: "shared" (the stacked engine) or "naive" (independent
         Nystrom-PCG per (sigma, weight, lam, fold) — the reference loop).
-      rank / max_iters / tol / warm_start / seed / mesh: as in :func:`tune`.
+      rank / max_iters / tol / warm_start / seed / mesh / telemetry: as in
+        :func:`tune`.
 
     Returns:
       A :class:`TuneResult`; ``best`` carries ``kernel`` (the q names),
@@ -635,14 +656,19 @@ def tune_multikernel(
     mk_problem = dataclasses.replace(
         problem, kernel=kernels, sigma=1.0, weights=None
     )
-    return run_search(
-        problem, mk_problem, space, resolved,
-        folds=folds, strategy=strategy, rank=rank, max_iters=max_iters,
-        tol=tol, seed=seed, warm_start=warm_start,
-        sigma_continuation=sigma_continuation, mesh=mesh,
-        extra_info={
-            "q": q,
-            "kernels": list(kernels),
-            "weight_samples": int(w_cands.shape[0]),
-        },
-    )
+    with as_telemetry(telemetry).span(
+        "tune/search-multikernel", n=problem.n, folds=folds, q=q,
+        policy=resolved.name, strategy=strategy,
+    ):
+        return run_search(
+            problem, mk_problem, space, resolved,
+            folds=folds, strategy=strategy, rank=rank, max_iters=max_iters,
+            tol=tol, seed=seed, warm_start=warm_start,
+            sigma_continuation=sigma_continuation, mesh=mesh,
+            extra_info={
+                "q": q,
+                "kernels": list(kernels),
+                "weight_samples": int(w_cands.shape[0]),
+            },
+            telemetry=telemetry,
+        )

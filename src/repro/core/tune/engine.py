@@ -43,6 +43,7 @@ from repro.core.blocked_cg import blocked_cg
 from repro.core.krr import KRRProblem, scaled_lam
 from repro.core.nystrom import nystrom_from_sketch
 from repro.core.operator import as_multirhs
+from repro.obs.metrics import counter as _obs_counter
 
 __all__ = [
     "Continuation",
@@ -67,14 +68,26 @@ class SweepCounter:
     multi-RHS matvec touches the same tiles as a single-RHS one, so the
     natural unit is a *sweep* = one full pass over the n x n tile grid
     (``pairs / n**2``).  This is the cost model docs/tuning.md accounts in.
+
+    Every ``add_matvec`` also feeds the identical quantity into the global
+    ``repro_kernel_pairs_total`` telemetry counter (``repro.obs.metrics``),
+    so per-search accounting (``TuneResult.sweeps`` — unchanged, the local
+    ``pairs`` float) and the process-wide metric can never disagree.
     """
 
     pairs: float = 0.0
 
     def add_matvec(self, rows: int, cols: int, count: int = 1) -> None:
-        self.pairs += float(rows) * float(cols) * count
+        """Tally ``count`` matvec passes over a (rows, cols) tile grid."""
+        q = float(rows) * float(cols) * count
+        self.pairs += q
+        _obs_counter(
+            "repro_kernel_pairs_total",
+            help="kernel pair evaluations tallied by tuning sweep accounting",
+        ).inc(q)
 
     def sweeps(self, n: int) -> float:
+        """Pair tally in full-K sweep units (``pairs / n**2``)."""
         return self.pairs / float(n) ** 2
 
 
@@ -267,6 +280,7 @@ def solve_sigma_group(
     | None = None,
     continuation: Continuation | None = None,
     want_continuation: bool = False,
+    recorder=None,
 ) -> GroupResult:
     """Solve ALL (weight, lam, fold, head) systems of one sigma group in ONE
     stacked blocked-CG.
@@ -294,6 +308,10 @@ def solve_sigma_group(
     Returns a :class:`GroupResult`; ``preds`` (n, C) = K @ W host-side — row
     i of a fold-j column is the fold-j model's prediction at x[i] (exact at
     validation rows, where w is zero by the mask).
+
+    ``recorder`` (a ``repro.obs.trace.TraceRecorder``) streams the stacked
+    CG's per-iteration residuals as canonical trace events when telemetry is
+    enabled.
     """
     n, t = y2.shape
     k = len(val_folds)
@@ -442,6 +460,7 @@ def solve_sigma_group(
         matvec, rhs_d, pinv, x0=x0, max_iters=max_iters, tol=tol,
         freeze_at=tuple(rung_iters) if rung_iters else None,
         freeze_callback=_freeze_cb if rung_iters else None,
+        recorder=recorder,
     )
     counter.add_matvec(n, n, res.iters + (1 if x0 is not None else 0))
 

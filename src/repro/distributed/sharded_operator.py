@@ -46,6 +46,14 @@ scoring is one more distributed ``matvec``.
 
 A mesh of total size 1 degrades gracefully: every collective is a no-op and
 all code paths run in a plain single-device pytest process.
+
+Observability: each global-array primitive counts its collectives into
+``repro_collective_dispatch_total{primitive=..., collective=...}``
+(``repro.obs.metrics``).  Counts are **dispatch-level** — tallied in the
+host-side ``call`` wrappers per primitive invocation, so a jitted caller
+that traces a wrapper once still counts every dispatch, but collectives
+fused inside someone else's shard_map body (the ``shard_*`` composites)
+are not tallied here.
 """
 
 from __future__ import annotations
@@ -60,8 +68,19 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.operator import KernelOperator
 from repro.distributed.jax_compat import shard_map
+from repro.obs.metrics import counter as _obs_counter
 
 MODEL_AXIS = "model"
+
+
+def _count_collective(primitive: str, collective: str, count: int = 1) -> None:
+    """Tally ``count`` dispatches of a collective inside ``primitive``."""
+    if count:
+        _obs_counter(
+            "repro_collective_dispatch_total",
+            labels={"primitive": primitive, "collective": collective},
+            help="host-side dispatches of mesh collectives by primitive",
+        ).inc(count)
 
 
 def row_axes(mesh: Mesh) -> tuple[str, ...]:
@@ -431,6 +450,10 @@ class ShardedKernelOperator:
                     local, mesh=self.mesh,
                     in_specs=(P(self.rows, None), spec), out_specs=spec,
                 ))
+            if self.n_row_shards > 1:
+                _count_collective("matvec", "all_gather", 2)  # x and v
+            if self.n_model > 1 and self.n % self.n_model == 0:
+                _count_collective("matvec", "psum")
             return jitted[v.ndim](self.x, v)
 
         return call
@@ -468,6 +491,10 @@ class ShardedKernelOperator:
         ))
 
         def call(v, w_cols):
+            if self.n_row_shards > 1:
+                _count_collective("matvec_cols", "all_gather", 2)
+            if self.n_model > 1 and self.n % self.n_model == 0:
+                _count_collective("matvec_cols", "psum")
             return jitted(self.x, v, w_cols)
 
         return call
@@ -507,6 +534,10 @@ class ShardedKernelOperator:
         the multi-kernel tuner."""
         self._require_bound()
         self._require_multikernel()
+        if self.n_row_shards > 1:
+            _count_collective("sketch_components", "all_gather", 2)
+        if self.n_model > 1 and self.n % self.n_model == 0:
+            _count_collective("sketch_components", "psum")
         return self._sketch_components_fn(self.x, omega)
 
     @cached_property
@@ -527,6 +558,10 @@ class ShardedKernelOperator:
                     in_specs=(P(), P(self.rows, None), self.vec_spec(v.ndim)),
                     out_specs=P(),
                 ))
+            if self.n_row_shards > 1:
+                _count_collective("row_block_matvec", "psum")
+            if self.n_model > 1 and a.shape[0] % self.n_model == 0:
+                _count_collective("row_block_matvec", "all_gather")
             return jitted[v.ndim](a, self.x, v)
 
         return call
@@ -552,6 +587,7 @@ class ShardedKernelOperator:
         def call(a, b):
             if self.n_model == 1 or a.shape[0] % self.n_model:
                 return self.local_op(b).block(a, b)  # replicated compute
+            _count_collective("block", "all_gather")
             return jitted(a, b)
 
         return call
@@ -588,6 +624,8 @@ class ShardedKernelOperator:
                     local, mesh=self.mesh, in_specs=in_specs,
                     out_specs=out_specs,
                 ))
+            if self.n_row_shards > 1:
+                _count_collective("gather_rows", "psum")  # one packed psum
             return jitted[key](idx, self.x, *extras)
 
         return call

@@ -52,6 +52,12 @@ def main() -> None:
                     help="ROWSxMODEL device mesh (e.g. 4x1) or 'auto': serve "
                          "every model row-sharded behind the same front end")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="write telemetry (serve/batch spans + metrics) "
+                         "as JSONL to PATH (repro.obs)")
+    ap.add_argument("--prometheus", action="store_true",
+                    help="also print the Prometheus text exposition of the "
+                         "per-model latency histograms + counters")
     args = ap.parse_args()
 
     from repro.serving.engine import ServingEngine
@@ -62,9 +68,16 @@ def main() -> None:
 
         mesh = make_solver_mesh(args.mesh)
 
+    tel = None
+    if args.telemetry:
+        from repro.obs import Telemetry
+
+        tel = Telemetry(jsonl=args.telemetry)
+
     engine = ServingEngine(max_batch=args.max_batch,
                            max_wait_ms=args.max_wait_ms,
-                           max_bytes=args.max_bytes)
+                           max_bytes=args.max_bytes,
+                           telemetry=tel)
     report: dict = {"loaded": {}}
     try:
         for spec in args.artifact:
@@ -102,8 +115,13 @@ def main() -> None:
                 "seconds": round(time.monotonic() - t0, 3),
             }
         report["stats"] = engine.stats()
+        if args.prometheus:
+            report["prometheus"] = engine.prometheus_text()
     finally:
         engine.shutdown()
+        if tel is not None:
+            tel.close()  # flush metric events after the worker stops
+            report["telemetry"] = args.telemetry
     print(json.dumps(report, indent=2, default=float))
 
 

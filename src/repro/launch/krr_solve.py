@@ -52,6 +52,9 @@ def main() -> None:
                     choices=["regression", "classification", "one-vs-all", "taxi"])
     ap.add_argument("--classes", type=int, default=4,
                     help="number of one-vs-all heads (dataset=one-vs-all)")
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="write telemetry (spans + solver traces + metrics) "
+                         "as JSONL to PATH (repro.obs)")
     args = ap.parse_args()
 
     mesh_spec = args.mesh if args.mesh is not None else (
@@ -85,6 +88,13 @@ def main() -> None:
         # default center count, clamped so tiny-n runs stay sampleable
         kw["m"] = min(1000, max(50, args.n // 20), args.n)
 
+    tel = None
+    if args.telemetry:
+        from repro.obs import Telemetry
+
+        tel = Telemetry(jsonl=args.telemetry)
+        kw["telemetry"] = tel
+
     t0 = time.perf_counter()
     if mesh_spec is not None:
         from repro.distributed.meshes import make_solver_mesh
@@ -97,6 +107,8 @@ def main() -> None:
     else:
         out = solve_any(prob, args.method, **kw)
         w, info = out.w, {"method": args.method, **out.info}
+    if tel is not None:
+        tel.close()  # flush metric events after the solve span closes
 
     if args.method == "falkon":  # inducing-point weights: full-K residual undefined
         rel, rel_heads = -1.0, None
@@ -119,6 +131,8 @@ def main() -> None:
         "test_acc": float(m.accuracy),
         "seconds": round(time.perf_counter() - t0, 2),
     }
+    if args.telemetry:
+        report["telemetry"] = args.telemetry
     if prob.t > 1:
         # test_acc above already IS top-1 accuracy: evaluate() decodes t > 1
         # predictions by argmax, and argmax of the ±1 one-hot targets is the

@@ -109,6 +109,9 @@ def main() -> None:
                     help="write a full serving artifact directory here "
                          "(config.json + weights.npz with the refit "
                          "solution; loadable by ServingEngine.load_model)")
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="write telemetry (spans + tune traces + metrics) "
+                         "as JSONL to PATH (repro.obs)")
     args = ap.parse_args()
     if args.export_artifact and args.no_refit:
         ap.error("--export-artifact needs the refit weights; drop --no-refit")
@@ -146,6 +149,12 @@ def main() -> None:
         seed=args.seed,
         sigma_continuation=args.sigma_continuation,
     )
+    tel = None
+    if args.telemetry:
+        from repro.obs import Telemetry
+
+        tel = Telemetry(jsonl=args.telemetry)
+        tune_kw["telemetry"] = tel
     if args.policy is not None:
         tune_kw.update(policy=args.policy, halving_eta=args.halving_eta)
     if args.kernels is not None:
@@ -194,6 +203,8 @@ def main() -> None:
             kw = {"epochs": max(1, args.refit_iters // 100)}
         if args.method == "falkon":
             kw["m"] = min(1000, max(50, args.n // 20), args.n)
+        if tel is not None:
+            kw["telemetry"] = tel  # refit rides the same JSONL stream
         if (w0 is not None and mesh is None
                 and "w0" in METHOD_OPTIONS.get(args.method, ())):
             # warm-start the refit from the winner's fold-averaged CV
@@ -217,6 +228,9 @@ def main() -> None:
                                 np.asarray(x_tr), np.asarray(out.w))
             report["exported_artifact"] = args.export_artifact
     report["seconds"] = round(time.perf_counter() - t0, 2)
+    if tel is not None:
+        tel.close()  # flush metric events after all spans close
+        report["telemetry"] = args.telemetry
 
     if args.export:
         # the serving-ready best config PLUS the audit trail: serving

@@ -1,0 +1,76 @@
+"""repro.obs — unified telemetry: spans, metrics, and solver traces.
+
+One dependency-free subsystem replaces the repo's three ad-hoc measurement
+paths (tune-engine ``SweepCounter`` pair accounting, per-solver ``history``
+dicts, ``ServingEngine.stats()`` latency lists):
+
+  * **spans** (:mod:`repro.obs.spans`) — nested wall+CPU timed regions via a
+    contextvar stack; thread-safe; no-op by default.
+  * **metrics** (:mod:`repro.obs.metrics`) — process-global counters /
+    gauges / bounded histograms (kernel pairs, tile FLOPs+bytes by dtype,
+    CG iterations, distributed collective dispatches, serving queue depth),
+    with ``snapshot()/diff()`` for benchmarks and Prometheus text exposition.
+  * **traces** (:mod:`repro.obs.trace`) — one canonical per-iteration record
+    emitted by every solver through :class:`TraceRecorder`, with the legacy
+    ``history`` shape kept as a compatibility view.
+
+Thread a :class:`Telemetry` session through the public entry points::
+
+    tel = Telemetry(jsonl="run.jsonl")
+    result = solve(problem, method="askotch", telemetry=tel)
+    tel.close()
+    validate_jsonl("run.jsonl")   # strict schema check
+
+``telemetry=None`` (the default) resolves to the shared disabled session;
+the disabled path is an identity check, <5% overhead on a small solve.
+See docs/observability.md for the quickstart and the event schema reference.
+"""
+
+from repro.obs.metrics import (
+    REGISTRY,
+    Counter,
+    Gauge,
+    Histogram,
+    counter,
+    diff,
+    gauge,
+    histogram,
+    log_buckets,
+    prometheus_text,
+    record_tile_work,
+    snapshot,
+)
+from repro.obs.sinks import NULL_SINK, JsonlSink, MultiSink, NullSink, RingSink
+from repro.obs.spans import current_span_id, set_sink, span
+from repro.obs.telemetry import NULL_TELEMETRY, Telemetry, as_telemetry
+from repro.obs.trace import SCHEMAS, TraceRecorder, validate_event, validate_jsonl
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "JsonlSink",
+    "MultiSink",
+    "NULL_SINK",
+    "NULL_TELEMETRY",
+    "NullSink",
+    "REGISTRY",
+    "RingSink",
+    "SCHEMAS",
+    "Telemetry",
+    "TraceRecorder",
+    "as_telemetry",
+    "counter",
+    "current_span_id",
+    "diff",
+    "gauge",
+    "histogram",
+    "log_buckets",
+    "prometheus_text",
+    "record_tile_work",
+    "set_sink",
+    "snapshot",
+    "span",
+    "validate_event",
+    "validate_jsonl",
+]

@@ -1,0 +1,166 @@
+"""The per-run telemetry session object threaded through the public APIs.
+
+:class:`Telemetry` bundles a sink with span/recorder factories so one object
+flows through ``solve(..., telemetry=tel)``, ``tune(..., telemetry=tel)``,
+``ServingEngine(..., telemetry=tel)``, and the ``--telemetry PATH`` launch
+flags:
+
+    >>> from repro.obs import Telemetry
+    >>> tel = Telemetry(ring=True)          # or jsonl="/tmp/run.jsonl"
+    >>> with tel.span("demo", n=4):
+    ...     pass
+    >>> tel.close()
+
+``close()`` flushes a final batch of ``type="metric"`` events (the global
+registry's snapshot, so the JSONL is self-contained) and closes the sink.
+
+:data:`NULL_TELEMETRY` is the shared disabled instance; :func:`as_telemetry`
+maps ``None`` to it so every instrumented call site can do
+``tel = as_telemetry(telemetry)`` and then branch on the precomputed
+``tel.enabled`` bool — the whole disabled path is one attribute load per
+iteration, measured <5% overhead on a small solve (tests/test_obs.py).
+
+Optional ``profiler=True`` additionally wraps spans in
+``jax.profiler.TraceAnnotation`` so they show up on the device timeline
+(lazy import; silently unavailable without jax).
+"""
+
+from __future__ import annotations
+
+from repro.obs import metrics as _metrics
+from repro.obs.sinks import NULL_SINK, JsonlSink, MultiSink, RingSink
+from repro.obs.spans import NULL_SPAN, Span
+from repro.obs.trace import TraceRecorder
+
+__all__ = ["NULL_TELEMETRY", "Telemetry", "as_telemetry"]
+
+
+class Telemetry:
+    """One telemetry session: a sink plus span / trace-recorder factories.
+
+    Construct with ``jsonl=path`` (file), ``ring=True`` / ``ring=RingSink``
+    (in-memory), an explicit ``sink=``, or nothing (disabled).  Passing more
+    than one of jsonl/ring/sink fans out through a ``MultiSink``.
+    """
+
+    def __init__(self, *, jsonl=None, ring=None, sink=None, profiler=False):
+        sinks = []
+        self.ring = None
+        if jsonl is not None:
+            sinks.append(JsonlSink(jsonl))
+        if ring:
+            self.ring = ring if isinstance(ring, RingSink) else RingSink()
+            sinks.append(self.ring)
+        if sink is not None:
+            sinks.append(sink)
+        if not sinks:
+            self.sink = NULL_SINK
+        elif len(sinks) == 1:
+            self.sink = sinks[0]
+        else:
+            self.sink = MultiSink(sinks)
+        self.profiler = bool(profiler)
+        self._closed = False
+
+    @property
+    def enabled(self) -> bool:
+        """True when events actually go somewhere — instrumented hot loops
+        read this once up front and skip per-iteration work when False."""
+        return self.sink is not NULL_SINK
+
+    def span(self, name: str, **attrs):
+        """Open a span on this session's sink (no-op when disabled).
+
+        With ``profiler=True`` the span is additionally annotated on the
+        jax device timeline via ``jax.profiler.TraceAnnotation``.
+        """
+        if self.sink is NULL_SINK and not self.profiler:
+            return NULL_SPAN
+        s = Span(name, self.sink, attrs) if self.sink is not NULL_SINK else NULL_SPAN
+        if not self.profiler:
+            return s
+        return _ProfiledSpan(name, s)
+
+    def recorder(self, solver: str, *, precision=None, sweep_counter=None,
+                 n=None) -> TraceRecorder:
+        """Create a :class:`~repro.obs.trace.TraceRecorder` bound to this
+        session (legacy ``history`` always recorded; events when enabled)."""
+        return TraceRecorder(solver, precision=precision, telemetry=self,
+                             sweep_counter=sweep_counter, n=n)
+
+    def emit_metrics(self) -> None:
+        """Emit one ``type="metric"`` event per global-registry series so
+        the JSONL stream is self-contained (no separate scrape needed)."""
+        if self.sink is NULL_SINK:
+            return
+        with _metrics.REGISTRY._lock:
+            items = sorted(_metrics.REGISTRY._metrics.items())
+        for (name, lk), m in items:
+            if m.kind == "histogram":
+                vals = {"_count": float(m.count), "_sum": float(m.sum)}
+            else:
+                vals = {"": float(m.value)}
+            for suffix, v in vals.items():
+                event = {"type": "metric", "name": name + suffix,
+                         "kind": m.kind, "value": v}
+                if lk:
+                    event["labels"] = dict(lk)
+                self.sink.emit(event)
+
+    def close(self) -> None:
+        """Flush the metric snapshot into the stream and close the sink
+        (idempotent)."""
+        if self._closed:
+            return
+        self._closed = True
+        self.emit_metrics()
+        self.sink.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+class _ProfiledSpan:
+    """Span wrapper that mirrors the region onto the jax profiler timeline."""
+
+    __slots__ = ("_span", "_annot")
+
+    def __init__(self, name: str, inner):
+        self._span = inner
+        try:
+            from jax.profiler import TraceAnnotation
+            self._annot = TraceAnnotation(name)
+        except Exception:  # jax absent or profiler unavailable
+            self._annot = None
+
+    def __enter__(self):
+        if self._annot is not None:
+            self._annot.__enter__()
+        self._span.__enter__()
+        return self
+
+    def __exit__(self, *exc):
+        self._span.__exit__(*exc)
+        if self._annot is not None:
+            self._annot.__exit__(*exc)
+        return False
+
+
+#: the shared disabled session — what ``telemetry=None`` resolves to
+NULL_TELEMETRY = Telemetry()
+
+
+def as_telemetry(obj) -> Telemetry:
+    """Coerce a ``telemetry=`` argument: ``None`` → :data:`NULL_TELEMETRY`,
+    a :class:`Telemetry` passes through, anything else raises."""
+    if obj is None:
+        return NULL_TELEMETRY
+    if isinstance(obj, Telemetry):
+        return obj
+    raise TypeError(
+        f"telemetry= expects a repro.obs.Telemetry or None, got {type(obj).__name__}"
+    )

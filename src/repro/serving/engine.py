@@ -38,7 +38,6 @@ coalescing changes throughput, never values (enforced by
 
 from __future__ import annotations
 
-import collections
 import json
 import os
 import queue as queue_mod
@@ -50,6 +49,15 @@ from typing import Any
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.metrics import (
+    LATENCY_BUCKETS_MS,
+    Histogram,
+    _render_series,
+    counter as _obs_counter,
+    gauge as _obs_gauge,
+    record_tile_work,
+)
+from repro.obs.telemetry import as_telemetry
 from repro.serving.krr_serve import bind_operator_from_config
 
 ARTIFACT_CONFIG = "config.json"
@@ -141,7 +149,16 @@ class _ModelEntry:
         # stats (mutated by the worker thread only; read under the engine lock)
         self.n_requests = 0
         self.n_rows = 0
-        self.latencies_ms: collections.deque = collections.deque(maxlen=100_000)
+        # bounded log-spaced latency histogram — O(buckets) memory however
+        # long the server runs (the unbounded raw-latency list it replaced
+        # capped out at 100k floats per model); a LOCAL instance, not the
+        # global registry, so two engines serving a same-named model never
+        # mix latencies
+        self.latency_hist = Histogram(
+            "repro_serving_latency_ms", labels=(("model", name),),
+            help="request latency, submit to scatter (ms)",
+            buckets=LATENCY_BUCKETS_MS,
+        )
         self.occupancy: dict[int, list[int]] = {}  # bucket -> [runs, rows]
         self.t_first: float | None = None
         self.t_last: float | None = None
@@ -162,8 +179,12 @@ class _ModelEntry:
         return bucket_sizes(self.max_batch)
 
     def stats(self) -> dict[str, Any]:
-        """The per-model stats dict (see :meth:`ServingEngine.stats`)."""
-        lat = np.asarray(self.latencies_ms, dtype=np.float64)
+        """The per-model stats dict (see :meth:`ServingEngine.stats`).
+
+        p50/p99 are bucket-interpolated estimates from the bounded latency
+        histogram; ``mean_ms`` stays exact (the histogram keeps exact
+        sum/count).
+        """
         span = (
             (self.t_last - self.t_first)
             if (self.t_first is not None and self.t_last is not None)
@@ -175,9 +196,9 @@ class _ModelEntry:
             "n_requests": self.n_requests,
             "n_rows": self.n_rows,
             "qps": (self.n_requests / span) if span > 0 else 0.0,
-            "p50_ms": float(np.percentile(lat, 50)) if lat.size else 0.0,
-            "p99_ms": float(np.percentile(lat, 99)) if lat.size else 0.0,
-            "mean_ms": float(lat.mean()) if lat.size else 0.0,
+            "p50_ms": self.latency_hist.quantile(0.50),
+            "p99_ms": self.latency_hist.quantile(0.99),
+            "mean_ms": self.latency_hist.mean,
             "occupancy": {
                 b: {"runs": r, "rows": rows,
                     "fill": rows / (r * b) if r else 0.0}
@@ -186,6 +207,16 @@ class _ModelEntry:
             "compile_cache_depth": len(self.warmed),
             "bytes": self.nbytes,
         }
+
+    def reset_stats(self) -> None:
+        """Zero this model's traffic stats (latency histogram, counts,
+        occupancy, qps span) — warmed buckets and the registry entry stay."""
+        self.n_requests = 0
+        self.n_rows = 0
+        self.latency_hist.reset()
+        self.occupancy = {}
+        self.t_first = None
+        self.t_last = None
 
 
 class _Request:
@@ -212,13 +243,22 @@ class ServingEngine:
       max_bytes: optional registry memory budget over (x_train + w) bytes;
         registering past it LRU-evicts idle models.  A single model larger
         than the budget is rejected outright.
+      telemetry: optional ``repro.obs.Telemetry`` — the worker then emits a
+        span per fused batch and tile-work metrics per bucket pass (latency
+        histograms, queue-depth gauge, and bucket-fill counters are always
+        on; they are bounded and cost O(1) per batch).
     """
 
     def __init__(self, *, max_batch: int = 4096, max_wait_ms: float = 5.0,
-                 max_bytes: int | None = None):
+                 max_bytes: int | None = None, telemetry=None):
         self.max_batch = int(max_batch)
         self.max_wait_ms = float(max_wait_ms)
         self.max_bytes = max_bytes
+        self._tel = as_telemetry(telemetry)
+        self._queue_gauge = _obs_gauge(
+            "repro_serving_queue_depth",
+            help="requests waiting in the coalescing queue",
+        )
         self._models: dict[str, _ModelEntry] = {}
         self._lock = threading.Lock()
         self._queue: queue_mod.Queue[_Request] = queue_mod.Queue()
@@ -405,6 +445,51 @@ class ServingEngine:
                 "max_bytes": self.max_bytes,
             }
 
+    def reset_stats(self, name: str | None = None) -> None:
+        """Zero traffic stats (latency histogram, request/row counts, bucket
+        occupancy, qps span) for one model, or for every registered model
+        when ``name`` is None.  Registered models, warmed buckets, and the
+        eviction count are untouched — this is the long-running server's
+        "start a fresh measurement window" knob."""
+        with self._lock:
+            entries = (
+                [self._models[name]] if name is not None
+                else list(self._models.values())
+            )
+        for e in entries:
+            e.reset_stats()
+
+    def prometheus_text(self) -> str:
+        """Per-model latency histograms and request/row totals in the
+        Prometheus text exposition format (``_bucket{le=}`` cumulative
+        series + ``_sum``/``_count``), rendered from the same bounded
+        histograms :meth:`stats` reads."""
+        with self._lock:
+            entries = sorted(self._models.items())
+        lines: list[str] = []
+        if entries:
+            lines.append("# HELP repro_serving_latency_ms request latency, "
+                         "submit to scatter (ms)")
+            lines.append("# TYPE repro_serving_latency_ms histogram")
+            for name, e in entries:
+                lines.extend(_render_series(
+                    "repro_serving_latency_ms", (("model", name),),
+                    e.latency_hist,
+                ))
+            lines.append("# TYPE repro_serving_requests_total counter")
+            for name, e in entries:
+                lines.append(
+                    f'repro_serving_requests_total{{model="{name}"}} '
+                    f"{float(e.n_requests)}"
+                )
+            lines.append("# TYPE repro_serving_rows_total counter")
+            for name, e in entries:
+                lines.append(
+                    f'repro_serving_rows_total{{model="{name}"}} '
+                    f"{float(e.n_rows)}"
+                )
+        return "\n".join(lines) + ("\n" if lines else "")
+
     # -- the worker loop ------------------------------------------------------
 
     def _run(self) -> None:
@@ -437,6 +522,7 @@ class ServingEngine:
                         break
                 batch.append(nxt)
                 rows += nxt.xq.shape[0]
+            self._queue_gauge.set(self._queue.qsize())
             by_entry: dict[int, list[_Request]] = {}
             for r in batch:
                 by_entry.setdefault(id(r.entry), []).append(r)
@@ -456,21 +542,34 @@ class ServingEngine:
             [r.xq for r in reqs], axis=0
         )
         total = flat.shape[0]
+        tel_enabled = self._tel.enabled
+        precision = getattr(entry.op, "precision", "f32")
         outs = []
         start = 0
-        while start < total:
-            stop = min(start + entry.max_batch, total)
-            b = bucket_for(stop - start, entry.max_batch)
-            padded = np.zeros((b, entry.d), flat.dtype)
-            padded[: stop - start] = flat[start:stop]
-            # the ONE device round trip: a warmed bucket shape in, host
-            # scores out (np.asarray blocks on the device computation)
-            out = np.asarray(entry.score(padded))[: stop - start]
-            entry.occupancy.setdefault(b, [0, 0])
-            entry.occupancy[b][0] += 1
-            entry.occupancy[b][1] += stop - start
-            outs.append(out)
-            start = stop
+        with self._tel.span("serve/batch", model=entry.name,
+                            requests=len(reqs), rows=total):
+            while start < total:
+                stop = min(start + entry.max_batch, total)
+                b = bucket_for(stop - start, entry.max_batch)
+                padded = np.zeros((b, entry.d), flat.dtype)
+                padded[: stop - start] = flat[start:stop]
+                # the ONE device round trip: a warmed bucket shape in, host
+                # scores out (np.asarray blocks on the device computation)
+                out = np.asarray(entry.score(padded))[: stop - start]
+                entry.occupancy.setdefault(b, [0, 0])
+                entry.occupancy[b][0] += 1
+                entry.occupancy[b][1] += stop - start
+                labels = {"model": entry.name, "bucket": str(b)}
+                _obs_counter("repro_serving_bucket_runs_total", labels,
+                             help="fused bucket passes").inc()
+                _obs_counter("repro_serving_bucket_rows_total", labels,
+                             help="query rows served per bucket").inc(
+                                 stop - start)
+                if tel_enabled:
+                    # one fused (bucket, n_train) kernel pass per run
+                    record_tile_work(b, int(entry.op.n), entry.d, precision)
+                outs.append(out)
+                start = stop
         out = outs[0] if len(outs) == 1 else np.concatenate(outs, axis=0)
         t_done = time.monotonic()
         ofs = 0
@@ -481,7 +580,7 @@ class ServingEngine:
             r.future.latency_ms = lat_ms
             r.future.set_result(out[ofs: ofs + ln])
             ofs += ln
-            entry.latencies_ms.append(lat_ms)
+            entry.latency_hist.observe(lat_ms)
         entry.n_requests += len(reqs)
         entry.n_rows += total
         if entry.t_first is None:

@@ -28,6 +28,13 @@ PUBLIC_MODULES = (
     "repro.kernels.precision",
     "repro.core.rff",
     "repro.distributed.sharded_operator",
+    "repro.obs",
+    "repro.obs.spans",
+    "repro.obs.metrics",
+    "repro.obs.trace",
+    "repro.obs.telemetry",
+    "repro.obs.sinks",
+    "repro.obs.report",
     "repro.serving.krr_serve",
     "repro.serving.engine",
     "repro.estimators",
@@ -62,6 +69,11 @@ PUBLIC_CALLABLES = {
     "repro.core.kernels": ("kernel_family", "kernel_diag", "kernel_matrix"),
     "repro.core.operator": ("widen_gram",),
     "repro.estimators": ("resolve_sigma",),
+    "repro.obs": ("Telemetry", "as_telemetry", "TraceRecorder", "span",
+                  "counter", "gauge", "histogram", "snapshot", "diff",
+                  "prometheus_text", "record_tile_work", "validate_event",
+                  "validate_jsonl", "log_buckets"),
+    "repro.obs.report": ("summarize", "main"),
 }
 
 #: classes whose public methods must each be documented
@@ -131,7 +143,8 @@ def test_tuning_module_doctest():
 
 
 @pytest.mark.parametrize("doc", ["docs/tuning.md", "docs/solvers.md",
-                                 "docs/serving.md", "docs/estimators.md"])
+                                 "docs/serving.md", "docs/estimators.md",
+                                 "docs/observability.md"])
 def test_docs_quickstart_doctests(doc):
     res = doctest.testfile(
         str(ROOT / doc), module_relative=False,
@@ -144,7 +157,7 @@ def test_docs_quickstart_doctests(doc):
 def test_docs_exist_and_linked_from_readme():
     readme = (ROOT / "README.md").read_text()
     for page in ("architecture", "tuning", "solvers", "serving",
-                 "estimators"):
+                 "estimators", "observability"):
         assert (ROOT / "docs" / f"{page}.md").exists()
         assert f"docs/{page}.md" in readme, f"README must link docs/{page}.md"
 
