@@ -56,14 +56,17 @@ def _nystrom_full(problem: KRRProblem, rank: int, key: jax.Array) -> NystromFact
 
 
 def _rff_full(problem: KRRProblem, rank: int, key: jax.Array) -> NystromFactors:
-    from repro.core.rff import rff_factors  # local: keep pcg import-light
+    from repro.core.rff import RFF_KERNELS, rff_factors  # local: keep pcg import-light
 
-    if problem.kernel != "rbf":
+    if problem.kernel not in RFF_KERNELS:
         raise ValueError(
-            'kind="rff" preconditioning is rbf-only (the Gaussian spectral '
-            f"measure); got kernel={problem.kernel!r} — use kind=\"nystrom\""
+            'kind="rff" preconditioning needs a shift-invariant kernel with '
+            f"an implemented spectral measure ({RFF_KERNELS}); got "
+            f"kernel={problem.kernel!r} — use kind=\"nystrom\""
         )
-    return rff_factors(key, problem.x, rank, float(problem.sigma))
+    return rff_factors(
+        key, problem.x, rank, float(problem.sigma), kernel=problem.kernel
+    )
 
 
 def make_preconditioner(

@@ -15,6 +15,13 @@ make_solver_mesh``) and the ASkotch/Skotch/PCG/CG methods run through the
 row-sharded and a mesh-aware predict_fn; everything else about the contract
 (multi-RHS, history records, option validation) is unchanged.  A 1-device
 mesh is valid and runs the distributed code with no-op collectives.
+
+``method="dc"`` is the communication-avoiding alternative: partition the
+rows into ``dc_shards`` shards, run a full LOCAL solve per shard (any
+inner method via ``dc_method=``), and combine predictions
+(``dc_combiner=``) — near-zero collective traffic at a bounded accuracy
+cost (``distributed/dc.py``; docs/distributed.md has the cost model).
+With ``mesh=`` the shards run device-parallel; without one, sequentially.
 """
 
 from __future__ import annotations
@@ -40,6 +47,7 @@ METHODS = (
     "falkon",
     "eigenpro",
     "direct",
+    "dc",
 )
 
 #: tolerances below this are unreachable with bf16 kernel tiles (unit
@@ -64,6 +72,15 @@ _EIGENPRO_KEYS = (
     "eval_every", "time_budget_s",
 )
 
+#: options of the divide-and-conquer tier itself (``method="dc"``); the
+#: INNER solver's options (``METHOD_OPTIONS[dc_method]``) ride along
+#: un-prefixed and are validated fail-fast by the per-shard solve —
+#: ``solve(p, "dc", dc_shards=4, dc_method="pcg-nystrom", rank=50)``
+DC_METHOD_OPTIONS: tuple[str, ...] = (
+    "dc_shards", "dc_partition", "dc_combiner", "dc_method",
+    "dc_softmax_temp",
+)
+
 #: accepted keyword options per method (satellite of the solve() contract —
 #: anything else raises ValueError instead of leaking into a TypeError)
 METHOD_OPTIONS: dict[str, tuple[str, ...]] = {
@@ -76,6 +93,7 @@ METHOD_OPTIONS: dict[str, tuple[str, ...]] = {
     "falkon": _FALKON_KEYS,
     "eigenpro": _EIGENPRO_KEYS,
     "direct": (),
+    "dc": DC_METHOD_OPTIONS,
 }
 
 _DIST_ASKOTCH_KEYS = (
@@ -179,6 +197,40 @@ def _solve_dist(problem: KRRProblem, method: str, mesh, kw: dict) -> SolveOutput
     )
 
 
+def _solve_dc(problem: KRRProblem, mesh, telemetry, kw: dict) -> SolveOutput:
+    # imported lazily, mirroring _solve_dist: the plain path never loads
+    # the distributed stack
+    from repro.distributed.dc import solve_dc
+
+    bad = sorted(
+        k for k in kw if k.startswith("dc_") and k not in DC_METHOD_OPTIONS
+    )
+    if bad:
+        raise ValueError(
+            f"unknown option(s) {bad} for method 'dc'; accepted: "
+            f"{sorted(DC_METHOD_OPTIONS)} plus the inner method's options "
+            f"(METHOD_OPTIONS[dc_method])"
+        )
+    res = solve_dc(
+        problem,
+        shards=kw.pop("dc_shards", 2),
+        partition=kw.pop("dc_partition", "random"),
+        combiner=kw.pop("dc_combiner", "uniform"),
+        method=kw.pop("dc_method", "askotch"),
+        softmax_temp=kw.pop("dc_softmax_temp", None),
+        mesh=mesh,
+        telemetry=telemetry,
+        **kw,
+    )
+    return SolveOutput(
+        method="dc",
+        w=res.w,
+        history=res.history,
+        info=res.info,
+        predict_fn=res.predict_fn,
+    )
+
+
 def tune(problem: KRRProblem, *, mesh=None, **kw):
     """Hyperparameter search over (sigma, lam) with k-fold CV — the
     policy-driven tile-sharing sweep of ``repro.core.tune`` behind the
@@ -265,7 +317,10 @@ def solve(problem: KRRProblem, method: str = "askotch", *, mesh=None, **kw) -> S
         valid and runs the distributed code with no-op collectives.
       **kw: method-specific options — exactly :data:`METHOD_OPTIONS[method]`
         (:data:`DIST_METHOD_OPTIONS[method]` with ``mesh=``); anything else
-        raises ValueError with the accepted list.  Three universal overrides
+        raises ValueError with the accepted list.  ``method="dc"`` accepts
+        :data:`DC_METHOD_OPTIONS` (``dc_shards``, ``dc_partition``,
+        ``dc_combiner``, ``dc_method``, ``dc_softmax_temp``) plus the inner
+        method's own options un-prefixed.  Three universal overrides
         are accepted for every method: ``kernel=`` (a name, or a TUPLE of
         names for a weighted-sum multi-kernel solve), ``weights=`` (the
         combination weights) and ``precision=`` ("f32" | "bf16" kernel-tile
@@ -309,6 +364,11 @@ def solve(problem: KRRProblem, method: str = "askotch", *, mesh=None, **kw) -> S
             'short of it — use precision="f32" for machine-precision targets',
             stacklevel=2,
         )
+    if method == "dc":
+        # the divide-and-conquer tier owns its own mesh handling (explicit
+        # per-device placement, zero collectives) — routed BEFORE the
+        # ShardedKernelOperator dispatch below
+        return _solve_dc(problem, mesh, telemetry, kw)
     if mesh is not None:
         if problem.kernel == "precomputed":
             raise ValueError(

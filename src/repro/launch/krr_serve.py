@@ -10,6 +10,10 @@
     PYTHONPATH=src python -m repro.launch.krr_serve \
         --artifact a=/tmp/model_a --artifact b=/tmp/model_b --mesh auto
 
+    # restore a whole registry from an artifact tree (restart survival)
+    PYTHONPATH=src python -m repro.launch.krr_serve \
+        --artifacts-dir /tmp/krr_models --requests 0
+
 Each ``--artifact NAME=DIR`` hot-loads a :func:`repro.serving.engine.
 save_model_artifact` directory (the ``krr_tune --export-artifact`` output)
 into a :class:`repro.serving.engine.ServingEngine`; every bucket is
@@ -33,9 +37,13 @@ import numpy as np
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--artifact", action="append", default=[],
-                    metavar="NAME=DIR", required=True,
+                    metavar="NAME=DIR",
                     help="load a save_model_artifact directory as NAME "
-                         "(repeatable; at least one required)")
+                         "(repeatable)")
+    ap.add_argument("--artifacts-dir", default=None, metavar="DIR",
+                    help="restore the whole registry: register every "
+                         "artifact subdirectory of DIR under its directory "
+                         "name (ServingEngine.load_artifacts_dir)")
     ap.add_argument("--max-batch", type=int, default=1024,
                     help="largest fused bucket / coalescing drain cap")
     ap.add_argument("--max-wait-ms", type=float, default=5.0,
@@ -59,6 +67,8 @@ def main() -> None:
                     help="also print the Prometheus text exposition of the "
                          "per-model latency histograms + counters")
     args = ap.parse_args()
+    if not args.artifact and args.artifacts_dir is None:
+        ap.error("pass at least one --artifact NAME=DIR or --artifacts-dir")
 
     from repro.serving.engine import ServingEngine
 
@@ -80,6 +90,10 @@ def main() -> None:
                            telemetry=tel)
     report: dict = {"loaded": {}}
     try:
+        if args.artifacts_dir is not None:
+            report["loaded"].update(
+                engine.load_artifacts_dir(args.artifacts_dir, mesh=mesh)
+            )
         for spec in args.artifact:
             if "=" not in spec:
                 ap.error(f"--artifact wants NAME=DIR, got {spec!r}")

@@ -12,6 +12,13 @@ A distributed solve is the same call as a local one: ``--mesh ROWSxMODEL``
 askotch/skotch/pcg-nystrom/cg methods through ``solve(..., mesh=...)`` on a
 ShardedKernelOperator — multi-RHS (one-vs-all) included.  ``--distributed``
 is a deprecated alias for ``--mesh auto``.
+
+``--method dc`` runs the communication-avoiding divide-and-conquer tier
+(``--dc-shards/--dc-partition/--dc-combiner/--dc-method``, optionally with
+``--mesh`` for device-parallel shards and zero collective traffic):
+
+    PYTHONPATH=src python -m repro.launch.krr_solve --method dc \
+        --dc-shards 4 --dc-method pcg-nystrom --mesh auto
 """
 
 from __future__ import annotations
@@ -42,6 +49,16 @@ def main() -> None:
                          "accumulation, or full f32")
     ap.add_argument("--method", default="askotch")
     ap.add_argument("--iters", type=int, default=300)
+    ap.add_argument("--dc-shards", type=int, default=4,
+                    help="method=dc: shard count k (k=1 == the plain solver)")
+    ap.add_argument("--dc-partition", default="random",
+                    choices=["random", "kmeans"],
+                    help="method=dc: partitioner (distributed.partition)")
+    ap.add_argument("--dc-combiner", default="uniform",
+                    choices=["uniform", "softmax"],
+                    help="method=dc: prediction combiner (distributed.dc)")
+    ap.add_argument("--dc-method", default="askotch",
+                    help="method=dc: the inner solver run per shard")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh", default=None,
                     help="ROWSxMODEL device mesh (e.g. 4x2) or 'auto'; "
@@ -87,6 +104,9 @@ def main() -> None:
     if args.method == "falkon":
         # default center count, clamped so tiny-n runs stay sampleable
         kw["m"] = min(1000, max(50, args.n // 20), args.n)
+    if args.method == "dc":
+        kw.update(dc_shards=args.dc_shards, dc_partition=args.dc_partition,
+                  dc_combiner=args.dc_combiner, dc_method=args.dc_method)
 
     tel = None
     if args.telemetry:
@@ -102,7 +122,7 @@ def main() -> None:
         mesh = make_solver_mesh(mesh_spec)
         out = solve_any(prob, args.method, mesh=mesh, **kw)
         # gather the row-sharded weights for host-side reporting
-        w = np.asarray(out.w)
+        w = np.asarray(out.w) if out.w is not None else None
         info = {"method": f"{args.method}-distributed", **out.info}
     else:
         out = solve_any(prob, args.method, **kw)
@@ -112,6 +132,12 @@ def main() -> None:
 
     if args.method == "falkon":  # inducing-point weights: full-K residual undefined
         rel, rel_heads = -1.0, None
+    elif args.method == "dc":
+        # the global residual is undefined for the combined local models;
+        # history's aggregate record carries the worst LOCAL shard residual
+        rel = out.history[-1].get("rel_residual")
+        rel = float(rel) if rel is not None else -1.0
+        rel_heads = None
     elif mesh_spec is not None and out.history:
         # the distributed solve already evaluated the residual on the mesh —
         # don't re-stream the O(n^2 d) kernel pass on one host device

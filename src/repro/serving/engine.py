@@ -319,6 +319,38 @@ class ServingEngine:
         config, x_train, w = load_model_artifact(path)
         return self.register(name, config, x_train, w, mesh=mesh, warm=warm)
 
+    def load_artifacts_dir(self, path: str, *, mesh=None,
+                           warm: bool = True) -> dict[str, dict[str, Any]]:
+        """Re-register every artifact under ``path`` — registry persistence.
+
+        Scans the immediate subdirectories of ``path`` for the
+        :func:`save_model_artifact` layout (``config.json`` +
+        ``weights.npz``) and :meth:`register`s each under its directory
+        name, in sorted order; anything else in ``path`` is ignored.  Run
+        at startup this restores the registry a previous process built by
+        exporting models into one directory tree — the restart-survival
+        story of the artifact format.  Returns ``{name: register-info}``;
+        raises if ``path`` holds no artifacts at all (an empty restore is
+        almost always a wrong path).
+        """
+        loaded: dict[str, dict[str, Any]] = {}
+        for entry in sorted(os.listdir(path)):
+            sub = os.path.join(path, entry)
+            if not os.path.isdir(sub):
+                continue
+            if not (
+                os.path.isfile(os.path.join(sub, ARTIFACT_CONFIG))
+                and os.path.isfile(os.path.join(sub, ARTIFACT_WEIGHTS))
+            ):
+                continue
+            loaded[entry] = self.load_model(entry, sub, mesh=mesh, warm=warm)
+        if not loaded:
+            raise FileNotFoundError(
+                f"no model artifacts ({ARTIFACT_CONFIG} + {ARTIFACT_WEIGHTS} "
+                f"subdirectories) under {path!r}"
+            )
+        return loaded
+
     def unregister(self, name: str) -> None:
         """Drop ``name`` from the registry (in-flight requests finish)."""
         with self._lock:

@@ -28,6 +28,8 @@ PUBLIC_MODULES = (
     "repro.kernels.precision",
     "repro.core.rff",
     "repro.distributed.sharded_operator",
+    "repro.distributed.partition",
+    "repro.distributed.dc",
     "repro.obs",
     "repro.obs.spans",
     "repro.obs.metrics",
@@ -65,7 +67,12 @@ PUBLIC_CALLABLES = {
                              "bucket_for"),
     "repro.core.blocked_cg": ("blocked_cg",),
     "repro.kernels.precision": ("check_precision",),
-    "repro.core.rff": ("rff_features", "rff_factors"),
+    "repro.core.rff": ("rff_features", "rff_factors", "sample_freqs"),
+    "repro.distributed.partition": ("Partition", "make_partition",
+                                    "random_partition", "kmeans_partition",
+                                    "balanced_sizes", "chunked_sq_dists"),
+    "repro.distributed.dc": ("solve_dc", "combiner_weights",
+                             "collective_dispatch_delta", "DCSolveResult"),
     "repro.core.kernels": ("kernel_family", "kernel_diag", "kernel_matrix"),
     "repro.core.operator": ("widen_gram",),
     "repro.estimators": ("resolve_sigma",),
@@ -144,7 +151,8 @@ def test_tuning_module_doctest():
 
 @pytest.mark.parametrize("doc", ["docs/tuning.md", "docs/solvers.md",
                                  "docs/serving.md", "docs/estimators.md",
-                                 "docs/observability.md"])
+                                 "docs/observability.md",
+                                 "docs/distributed.md"])
 def test_docs_quickstart_doctests(doc):
     res = doctest.testfile(
         str(ROOT / doc), module_relative=False,
@@ -157,7 +165,7 @@ def test_docs_quickstart_doctests(doc):
 def test_docs_exist_and_linked_from_readme():
     readme = (ROOT / "README.md").read_text()
     for page in ("architecture", "tuning", "solvers", "serving",
-                 "estimators", "observability"):
+                 "estimators", "observability", "distributed"):
         assert (ROOT / "docs" / f"{page}.md").exists()
         assert f"docs/{page}.md" in readme, f"README must link docs/{page}.md"
 

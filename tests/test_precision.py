@@ -155,7 +155,9 @@ def test_serving_reconstructs_bf16_policy():
 
 
 # ---------------------------------------------------------------------------
-# RFF preconditioner: Nystrom stand-in on rbf, hard error elsewhere
+# RFF preconditioner: Nystrom stand-in on every shift-invariant kernel with
+# an implemented spectral measure (Gaussian / Cauchy / Student-t), hard
+# error elsewhere
 # ---------------------------------------------------------------------------
 
 
@@ -165,6 +167,37 @@ def test_rff_within_1p5x_of_nystrom():
     orf = solve(p, "pcg-rff", max_iters=300, tol=1e-5, rank=100)
     assert on.info["converged"] and orf.info["converged"]
     assert orf.info["iters"] <= 1.5 * on.info["iters"]
+
+
+@pytest.mark.parametrize("kernel", ["laplacian", "matern52"])
+def test_rff_spectral_measures_within_1p5x_of_nystrom(kernel):
+    """The Cauchy (laplacian) and Student-t df=5 (matern52) spectral
+    measures must precondition like a same-rank Nystrom sketch — the
+    heavier-tailed frequency draws are absorbed by the oversampled-SVD
+    truncation."""
+    p = dataclasses.replace(
+        _problem(n=500, lam_unscaled=1e-4, kernel=kernel), sigma=2.0
+    )
+    on = solve(p, "pcg-nystrom", max_iters=400, tol=1e-5, rank=60, seed=0)
+    orf = solve(p, "pcg-rff", max_iters=400, tol=1e-5, rank=60, seed=0)
+    assert on.info["converged"] and orf.info["converged"]
+    assert orf.info["iters"] <= 1.5 * on.info["iters"]
+
+
+def test_rff_feature_gram_approximates_kernel():
+    """E[Z Z^T] = K for each implemented measure: at a generous feature
+    count the Monte-Carlo Gram must sit near the exact kernel block."""
+    import jax
+
+    from repro.core.rff import RFF_KERNELS, rff_features
+
+    r = np.random.default_rng(3)
+    x = jnp.asarray(r.standard_normal((40, 4)).astype(np.float32))
+    for kern in RFF_KERNELS:
+        z = rff_features(jax.random.PRNGKey(0), x, 8192, 2.0, kernel=kern)
+        k_exact = np.asarray(ops.kernel_block(x, x, kernel=kern, sigma=2.0))
+        err = np.abs(np.asarray(z @ z.T) - k_exact).max()
+        assert err < 0.08, (kern, err)
 
 
 def test_rff_oversampling_beats_exact_rank():
@@ -198,7 +231,8 @@ def test_rff_oversampling_beats_exact_rank():
     assert iters[4] <= iters[1]
 
 
-def test_rff_rejects_non_rbf():
-    p = _problem(kernel="laplacian", lam_unscaled=1e-3)
-    with pytest.raises(ValueError, match="rbf-only"):
+def test_rff_rejects_non_shift_invariant():
+    # linear has no shift-invariant spectral measure — still a hard error
+    p = _problem(kernel="linear", lam_unscaled=1e-3)
+    with pytest.raises(ValueError, match="shift-invariant"):
         solve(p, "pcg-rff", max_iters=10, rank=32)

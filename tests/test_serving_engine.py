@@ -65,6 +65,45 @@ def test_artifact_round_trip(tmp_path, model):
     np.testing.assert_array_equal(w2, w)
 
 
+def test_registry_survives_restart_via_artifacts_dir(tmp_path, model):
+    """The persistence loop: export models into one tree, kill the engine,
+    restore a fresh engine with load_artifacts_dir — same registry, bitwise
+    identical predictions."""
+    x, w = model
+    save_model_artifact(str(tmp_path / "alpha"), CFG_RBF, x, w)
+    save_model_artifact(str(tmp_path / "beta"), CFG_MULTI, x, w)
+    (tmp_path / "not_a_model").mkdir()       # ignored: no artifact files
+    (tmp_path / "stray.txt").write_text("x")  # ignored: not a directory
+    xq = np.random.default_rng(5).standard_normal((7, D)).astype(np.float32)
+
+    first = ServingEngine(max_batch=32, max_wait_ms=1.0)
+    try:
+        first.load_model("alpha", str(tmp_path / "alpha"))
+        f = first.submit("alpha", xq)
+        first.drain()
+        before = np.asarray(f.result())
+    finally:
+        first.shutdown()
+
+    restored = ServingEngine(max_batch=32, max_wait_ms=1.0)
+    try:
+        info = restored.load_artifacts_dir(str(tmp_path))
+        assert sorted(info) == ["alpha", "beta"] == restored.models()
+        assert info["alpha"]["version"] == 1 and info["alpha"]["d"] == D
+        f = restored.submit("alpha", xq)
+        restored.drain()
+        np.testing.assert_array_equal(np.asarray(f.result()), before)
+    finally:
+        restored.shutdown()
+
+    eng = ServingEngine(max_batch=32)
+    try:
+        with pytest.raises(FileNotFoundError, match="no model artifacts"):
+            eng.load_artifacts_dir(str(tmp_path / "not_a_model"))
+    finally:
+        eng.shutdown()
+
+
 @pytest.mark.parametrize("cfg", [CFG_RBF, CFG_MULTI],
                          ids=["single-kernel", "multi-kernel"])
 def test_threaded_clients_bitwise_equal_sequential(engine, model, cfg):
